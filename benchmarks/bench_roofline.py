@@ -1,0 +1,41 @@
+"""§Roofline table from the dry-run JSON artifacts (results/dryrun_*.json)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = ("results/dryrun_single.json", "results/dryrun_multi.json")
+
+
+def load_rows():
+    rows = []
+    for path in RESULTS:
+        if os.path.exists(path):
+            rows.extend(json.load(open(path)))
+    return rows
+
+
+def main():
+    rows = load_rows()
+    if not rows:
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return []
+    ok = [r for r in rows if r.get("status") == "ok"]
+    for r in ok:
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / step_s if step_s else 0.0
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             step_s * 1e6,
+             f"dom={r['dominant']};compute={r['compute_s']:.2e};"
+             f"mem={r['memory_s']:.2e};coll={r['collective_s']:.2e};"
+             f"flops_frac={frac:.2f};useful={r['useful_flops_ratio']:.3f}")
+    n_fail = len(rows) - len(ok)
+    emit("roofline_summary", 0.0, f"cells_ok={len(ok)};cells_fail={n_fail}")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

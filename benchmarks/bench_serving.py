@@ -1,0 +1,29 @@
+"""§Perf serving ladder table from results/hillclimb.json (regenerable via
+repro.launch.dryrun --serve-bits etc.; see EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def main():
+    path = "results/hillclimb.json"
+    if not os.path.exists(path):
+        emit("perf_ladder_missing", 0.0, "run the §Perf ladder first")
+        return []
+    rows = [r for r in json.load(open(path)) if r.get("status") == "ok"]
+    for r in rows:
+        v = r.get("variant") or {}
+        tag = "+".join(f"{k}={vv}" for k, vv in v.items()) or "baseline"
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"perf_{r['arch']}_{r['shape']}_{tag}", step * 1e6,
+             f"compute={r['compute_s']:.2e};mem={r['memory_s']:.2e};"
+             f"coll={r['collective_s']:.2e};useful={r['useful_flops_ratio']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

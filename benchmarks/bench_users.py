@@ -1,0 +1,56 @@
+"""Paper Fig. 3: average energy vs number of participating devices (2..35).
+
+More devices enrich the data (Corollary 2: fewer rounds to the target
+accuracy), so the total training energy drops until the round count saturates
+— reproduced with R_eps from the theory driving the energy accounting."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import codesign_instance, emit
+from repro.core import baselines
+from repro.core.convergence import ProblemConstants, corollary2_rounds
+from repro.core.gbd import run_gbd
+
+
+def energy_vs_users(ns=(2, 5, 10, 15, 20, 25, 30, 35), eps=0.35, seed=0):
+    rows = []
+    for n in ns:
+        data, spec, *_ = codesign_instance(n=n, rounds=3, seed=seed)
+        consts = ProblemConstants(L=1.0, tau_sq=16.0, phi=0.6, M=32, N=n,
+                                  d=1 << 16, F0_minus_Fstar=2.0)
+        # paper: iteration count saturates once data is rich enough
+        r_eps = max(corollary2_rounds(consts, eps), 40)
+        out = {"n": n, "rounds": r_eps}
+        for scheme, fn in [("fwq", lambda: run_gbd(data, spec, max_rounds=20)),
+                           ("full_precision", lambda: baselines.full_precision(data, spec)),
+                           ("unified_q", lambda: baselines.unified_q(data, spec)),
+                           ("rand_q", lambda: baselines.rand_q(data, spec, seed=seed))]:
+            res = fn()
+            per_round = res.energy / data.n_rounds
+            out[scheme] = per_round * r_eps / n      # average per device
+        rows.append(out)
+    return rows
+
+
+def main(out_json=""):
+    rows = energy_vs_users()
+    for r in rows:
+        emit(f"fig3_n{r['n']}", r["fwq"] * 1e6,
+             f"rounds={r['rounds']};fp={r['full_precision']:.3f}J;"
+             f"uq={r['unified_q']:.3f}J;rq={r['rand_q']:.3f}J;fwq={r['fwq']:.3f}J")
+    # headline: energy decreases then saturates
+    es = [r["fwq"] for r in rows]
+    emit("fig3_trend", 0.0, f"first={es[0]:.3f}J;last={es[-1]:.3f}J;"
+         f"monotone_drop={es[0] > es[-1]}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

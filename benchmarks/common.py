@@ -1,0 +1,70 @@
+"""Shared benchmark scaffolding: co-design instances + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.channel import ChannelModel
+from repro.core.convergence import quant_noise
+from repro.core.energy import CommParams, alpha_coefficients, heterogeneous_fleet, memory_capacities
+from repro.core.master import MasterSpec
+from repro.core.primal import PrimalData, _round_tmin
+
+
+def codesign_instance(n=10, rounds=4, seed=0, b_max=20e6, grad_mb=1.25,
+                      group_step_mhz=5.0, t_factor=1.15, frac_8=0.4,
+                      cap_lo_frac=0.5, cap_hi_frac=1.5):
+    """A (PrimalData, MasterSpec, fleet, channel, comm) tuple like the paper's
+    simulation setting (§5.1): N0=-174dBm, 2-20dBm tx power, heterogeneous
+    fleet in 4 compute groups, non-trivial memory limits."""
+    fleet = heterogeneous_fleet(n, seed=seed, group_step_mhz=group_step_mhz)
+    ch = ChannelModel(n_devices=n, seed=seed)
+    comm = CommParams(b_max_hz=b_max, grad_bytes=grad_mb * 1e6)
+    gains = ch.gain_matrix(rounds)
+    p_comm = np.array([d.p_comm for d in fleet])
+    a1 = np.zeros((rounds, n))
+    a2 = np.zeros((rounds, n))
+    for r in range(rounds):
+        a1[r], a2[r] = alpha_coefficients(gains[r], p_comm, comm)
+    beta1 = np.array([d.beta1 for d in fleet])
+    beta2 = np.array([d.beta2 for d in fleet])
+    p_comp = np.array([d.runtime_power() for d in fleet])
+    tmin32 = _round_tmin(a2, beta1 + 32 * beta2, b_max)
+    data = PrimalData(alpha1=a1, alpha2=a2, beta1=beta1, beta2=beta2,
+                      p_comp=p_comp, b_max=b_max,
+                      t_max=float(t_factor * tmin32.sum()))
+    caps = memory_capacities(n, lo_mb=grad_mb * cap_lo_frac,
+                             hi_mb=grad_mb * cap_hi_frac) * 1e6
+    spec = MasterSpec(bits_options=(8, 16, 32), n_devices=n,
+                      error_budget=1.0, mem_capacity_bytes=caps,
+                      model_bytes_fp=grad_mb * 1e6)
+    # Error budget (constraint 23): bind hard enough that only ~frac_8 of the
+    # cohort may take the most aggressive bit-width — this is what makes the
+    # bit/bandwidth TRADE (paper Fig. 5) non-degenerate.  Stay feasible w.r.t.
+    # memory-forced minimum bit-widths.
+    allowed = spec.allowed()
+    bits = np.asarray(spec.bits_options)
+    # minimum ACHIEVABLE error: every device at its largest memory-feasible
+    # bit-width — the budget must sit above this to be feasible at all
+    best = np.array([bits[np.flatnonzero(allowed[i])[-1]] for i in range(n)])
+    floor = float(np.sum(quant_noise(best) ** 2))
+    d8 = float(quant_noise([8])[0] ** 2)
+    d16 = float(quant_noise([16])[0] ** 2)
+    spec.error_budget = max(floor * 1.05,
+                            frac_8 * n * d8 + (1 - frac_8) * n * d16 * 1.05)
+    return data, spec, fleet, ch, comm
+
+
+def emit(name: str, value_us: float, derived: str = ""):
+    """The run.py CSV contract: ``name,us_per_call,derived``."""
+    print(f"{name},{value_us:.2f},{derived}")
+
+
+def timed(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeats * 1e6, out

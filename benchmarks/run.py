@@ -1,0 +1,57 @@
+"""Benchmark runner: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
+
+    PYTHONPATH=src python -m benchmarks.run           # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig2,kernels
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SECTIONS = {
+    "fig2_convergence": ("benchmarks.bench_convergence", {}),
+    "fig3_users": ("benchmarks.bench_users", {}),
+    "fig4_hetero": ("benchmarks.bench_hetero", {}),
+    "fig5_bandwidth": ("benchmarks.bench_bandwidth", {}),
+    "gbd": ("benchmarks.bench_gbd", {}),
+    "bound": ("benchmarks.bench_bound", {}),
+    "kernels": ("benchmarks.bench_kernels", {}),
+    "roofline": ("benchmarks.bench_roofline", {}),
+    "perf_ladder": ("benchmarks.bench_serving", {}),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated section filter")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, (mod_name, kw) in SECTIONS.items():
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main(**kw)
+        except Exception as e:  # pragma: no cover
+            traceback.print_exc()
+            failures.append((name, str(e)))
+            print(f"{name}_FAILED,0,{e}", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# {len(failures)} section(s) failed", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper reproduction driver (Fig. 2): FWQ vs Full-Precision / Unified-Q /
+Rand-Q on the CIFAR-class CNN, with accuracy + energy reporting.
+
+Run:  PYTHONPATH=src python examples/fl_cifar_fwq.py [--rounds 60]
+"""
+
+import argparse
+import json
+
+from benchmarks.bench_convergence import run_scheme
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--model", default="mobilenet", choices=["mobilenet", "resnet"])
+    ap.add_argument("--out", default="results/fig2_repro.json")
+    args = ap.parse_args()
+
+    results = []
+    for scheme in ("fwq", "full_precision", "unified_q", "rand_q"):
+        r = run_scheme(scheme, rounds=args.rounds, model_kind=args.model)
+        results.append(r)
+        print(f"{scheme:>16}: final_loss={r['losses'][-1]:.4f} "
+              f"acc={r['final_acc']:.3f} energy={r['total_energy_j']:.2f}J")
+
+    fwq = results[0]["total_energy_j"]
+    print("\nenergy vs FWQ (paper Fig. 2b/d trend — FWQ should be smallest):")
+    for r in results:
+        print(f"  {r['scheme']:>16}: {r['total_energy_j']/fwq:.2f}x")
+    try:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"\nwrote {args.out}")
+    except OSError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

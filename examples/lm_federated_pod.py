@@ -1,0 +1,34 @@
+"""FWQ federated training of an assigned LM architecture on the pod-style
+trainer (shard_map path) — smoke-scale so it runs on CPU.
+
+This is the same code path the 16x16 dry-run compiles at production scale:
+per-client quantization happens inline in the layers (transient, FSDP-aware).
+
+Run:  PYTHONPATH=src python examples/lm_federated_pod.py --arch glm4-9b
+"""
+
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--scheme", default="fwq")
+    args = ap.parse_args()
+
+    history = train_mod.main([
+        "--arch", args.arch, "--smoke",
+        "--rounds", str(args.rounds),
+        "--mesh", "1x1",
+        "--batch", "2", "--seq", "32",
+        "--scheme", args.scheme,
+    ])
+    losses = [h["loss"] for h in history]
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} rounds")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quantized serving example: pack a model to int8 (QTensor) and decode a
+batch of requests — the storage/bandwidth side of the paper's co-design.
+
+Run:  PYTHONPATH=src python examples/serve_quantized.py --arch yi-6b
+"""
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    serve_mod.main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--s-max", "64",
+    ])
+
+
+if __name__ == "__main__":
+    main()

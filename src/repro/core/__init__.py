@@ -1,0 +1,46 @@
+"""Paper core: FWQ quantization, convergence theory, energy models, GBD co-design."""
+
+from repro.core.quantization import (  # noqa: F401
+    PAPER_BITWIDTHS,
+    EXTENDED_BITWIDTHS,
+    FULL_PRECISION_BITS,
+    delta_from_bits,
+    sr_quantize,
+    nearest_quantize,
+    pack_quantize,
+    dequantize,
+    quantize_tree,
+    default_exempt,
+)
+from repro.core.fwq import (  # noqa: F401
+    FWQConfig,
+    FWQMetrics,
+    make_fwq_round,
+    make_tree_quant_loss,
+    make_inline_quantizer,
+    delta_for_clients,
+    identity_transform,
+)
+from repro.core.convergence import (  # noqa: F401
+    ProblemConstants,
+    corollary1_bound,
+    corollary1_lr,
+    corollary2_rounds,
+    error_budget_bound,
+    quant_noise,
+    quantization_error_floor,
+)
+from repro.core.energy import (  # noqa: F401
+    CommParams,
+    DeviceProfile,
+    alpha_coefficients,
+    comm_energy_j,
+    heterogeneous_fleet,
+    memory_capacities,
+    round_energy,
+)
+from repro.core.channel import ChannelModel  # noqa: F401
+from repro.core.primal import PrimalData, PrimalSolution, solve_primal  # noqa: F401
+from repro.core.master import MasterSpec, Cut, solve_master  # noqa: F401
+from repro.core.gbd import GBDResult, run_gbd  # noqa: F401
+from repro.core import baselines  # noqa: F401

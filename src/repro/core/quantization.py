@@ -1,0 +1,263 @@
+"""Stochastic-rounding weight quantization (paper Eq. 1).
+
+The paper quantizes a weight vector ``w`` with per-tensor scale ``s = ||w||_inf``
+onto a uniform grid of resolution ``Delta_q = 1 / (2**q - 1)`` using *stochastic
+rounding* (SR, unbiased: ``E[Q(w)] = w``).  The quantization noise that the
+optimization layer consumes is ``delta_i = s * Delta_{q_i}`` (Lemma 3 /
+constraint (23)), and the per-coordinate second moment obeys
+``E|Q(w)-w|^2 <= delta^2 / 4`` (De Sa et al., paper ref [6]).
+
+Two concrete realizations are provided:
+
+* **fake quantization** (:func:`sr_quantize`) — values are snapped to the grid
+  but kept in floating point.  This is bit-exact w.r.t. Algorithm 1 semantics
+  (the gradient is evaluated at ``Q_i(w)``) and supports *traced* per-client
+  ``Delta`` so one compiled program serves every heterogeneous bit-width
+  assignment the GBD layer produces.
+* **packed quantization** (:func:`pack_quantize` / :func:`dequantize`) — signed
+  integer codes + scale, the real storage format used on the serving path and
+  by the ``quant_matmul`` Pallas kernel.
+
+Design notes
+------------
+* ``q = 32`` (``FULL_PRECISION_BITS``) means bypass: ``Q(w) = w``; ``delta = 0``.
+* SR randomness is supplied through ``jax.random`` keys folded per
+  (client, round, tensor) by callers — fully deterministic and restartable.
+* Norm-like parameters are exempted via :func:`default_exempt` (see
+  DESIGN.md §6): quantizing RMSNorm scales / SSM recurrence params buys ~0
+  energy and measurably hurts stability, mirroring the paper's decision to
+  keep gradients/accumulators at high precision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of arrays
+
+FULL_PRECISION_BITS = 32
+#: Bit-widths the paper allows (powers of two, 8..32; 32 = no quantization).
+PAPER_BITWIDTHS = (8, 16, 32)
+#: Extended set used in some ablations (paper notes >=1 bit is feasible).
+EXTENDED_BITWIDTHS = (4, 8, 16, 32)
+
+
+def delta_from_bits(bits) -> jnp.ndarray:
+    """Quantization resolution ``Delta_q = 1/(2**q - 1)``; 0 for full precision.
+
+    Accepts python ints or traced int arrays (per-client vectors).
+    """
+    bits = jnp.asarray(bits)
+    full = bits >= FULL_PRECISION_BITS
+    # 2**q - 1 in float to tolerate traced bits; clamp to avoid overflow at 32.
+    denom = jnp.exp2(jnp.minimum(bits, 31).astype(jnp.float32)) - 1.0
+    return jnp.where(full, 0.0, 1.0 / denom)
+
+
+def tensor_scale(w: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor scale ``s = ||w||_inf`` (paper Eq. 1)."""
+    s = jnp.max(jnp.abs(w))
+    # Guard all-zero tensors; scale value is irrelevant then.
+    return jnp.where(s > 0, s, 1.0).astype(jnp.float32)
+
+
+def channel_scale(w: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Per-channel variant of the scale (beyond-paper option, keepdims)."""
+    s = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    return jnp.where(s > 0, s, 1.0).astype(jnp.float32)
+
+
+def _sr_round(t: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """Unbiased stochastic rounding of ``t`` to integers: E[round(t)] = t."""
+    lower = jnp.floor(t)
+    frac = t - lower
+    u = jax.random.uniform(key, t.shape, dtype=t.dtype)
+    return lower + (u < frac).astype(t.dtype)
+
+
+def sr_quantize(
+    w: jnp.ndarray,
+    delta: jnp.ndarray | float,
+    key: jax.Array,
+    *,
+    scale: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Fake-quantize ``w`` on the SR grid with resolution ``delta`` (Eq. 1).
+
+    ``delta`` may be a traced scalar (0 => bypass / full precision).  The
+    computation is written so that ``delta == 0`` exactly returns ``w`` without
+    a divide-by-zero, allowing a single program to mix quantized and
+    full-precision clients.
+
+    Differentiation: Algorithm 1 evaluates the gradient AT ``Q(w)`` and
+    applies it to the full-precision ``w`` — i.e. the straight-through
+    estimator.  We emit ``w + stop_gradient(Q(w) - w)``: the forward value is
+    exactly ``Q(w)``; the cotangent flows to ``w`` unchanged.  (Naively
+    differentiating through floor/compare is zero almost everywhere and
+    silently freezes training — regression-tested in tests/test_fwq_core.py.)
+    """
+    w = jnp.asarray(w)
+    compute_dtype = w.dtype
+    wf = w.astype(jnp.float32)
+    s = tensor_scale(wf) if scale is None else scale
+    delta = jnp.asarray(delta, dtype=jnp.float32)
+    step = s * delta  # grid pitch in real units == paper's delta_i
+    safe_step = jnp.where(step > 0, step, 1.0)
+    t = wf / safe_step
+    q = _sr_round(t, key) * safe_step
+    # Values cannot exceed s in magnitude by more than one step; clamp to grid
+    # range like any fixed-point representation would.
+    q = jnp.clip(q, -s, s)
+    out = jnp.where(step > 0, q, wf)
+    out = wf + jax.lax.stop_gradient(out - wf)   # straight-through (Alg. 1)
+    return out.astype(compute_dtype)
+
+
+def nearest_quantize(w: jnp.ndarray, delta: jnp.ndarray | float) -> jnp.ndarray:
+    """Deterministic round-to-nearest on the same grid (biased; for ablations).
+
+    Straight-through gradient, like :func:`sr_quantize`."""
+    w = jnp.asarray(w)
+    wf = w.astype(jnp.float32)
+    s = tensor_scale(wf)
+    step = jnp.asarray(delta, jnp.float32) * s
+    safe_step = jnp.where(step > 0, step, 1.0)
+    q = jnp.clip(jnp.round(wf / safe_step) * safe_step, -s, s)
+    out = jnp.where(step > 0, q, wf)
+    out = wf + jax.lax.stop_gradient(out - wf)
+    return out.astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packed (real) quantization — serving path / quant_matmul kernel format.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedTensor:
+    """Integer codes + scale.  ``w ~= codes * (scale * delta)``."""
+
+    codes: jnp.ndarray  # int8 (bits<=7) or int16 (bits<=15)
+    scale: jnp.ndarray  # f32 scalar or per-channel row
+    bits: int
+
+    @property
+    def delta(self) -> float:
+        return 1.0 / (2.0**self.bits - 1.0)
+
+    def nbytes(self) -> int:
+        return self.codes.size * self.codes.dtype.itemsize + self.scale.size * 4
+
+
+def storage_dtype(bits: int):
+    """Smallest signed integer dtype that holds codes in [-(2^b -1), 2^b -1]."""
+    if bits <= 7:
+        return jnp.int8
+    if bits <= 15:
+        return jnp.int16
+    return jnp.int32
+
+
+def pack_quantize(
+    w: jnp.ndarray,
+    bits: int,
+    key: jax.Array,
+    *,
+    per_channel: bool = False,
+    axis: int = -1,
+) -> PackedTensor:
+    """Really quantize: SR onto integer codes with ``2**bits - 1`` resolution."""
+    if bits >= FULL_PRECISION_BITS:
+        raise ValueError("pack_quantize is for bits < 32; use the raw tensor.")
+    wf = jnp.asarray(w, jnp.float32)
+    s = channel_scale(wf, axis) if per_channel else tensor_scale(wf)
+    delta = 1.0 / (2.0**bits - 1.0)
+    t = wf / (s * delta)
+    lim = 2**bits - 1
+    codes = jnp.clip(_sr_round(t, key), -lim, lim).astype(storage_dtype(bits))
+    return PackedTensor(codes=codes, scale=s, bits=bits)
+
+
+def dequantize(p: PackedTensor, dtype=jnp.float32) -> jnp.ndarray:
+    return (p.codes.astype(jnp.float32) * (p.scale * p.delta)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pytree application with exemptions.
+# ---------------------------------------------------------------------------
+
+ExemptFn = Callable[[str, jnp.ndarray], bool]
+
+#: Substrings of parameter path names never quantized (see DESIGN.md §6).
+DEFAULT_EXEMPT_SUBSTRINGS = (
+    "norm",        # RMSNorm / LayerNorm scales
+    "/ln",         # block layer-norm scales (stacked: ndim 2)
+    "ln_",
+    "a_log",       # Mamba2 recurrence
+    "dt_bias",
+    "d_skip",
+    "conv_",       # depthwise conv kernels (tiny, recurrence-adjacent)
+    "router",      # MoE routing tables
+    "bias",
+)
+# NOTE: vlm cross-attn gates are (L,)-scalars — exempted by the ndim<=1 rule.
+# "w_gate" MLP projections are real weights and MUST stay quantizable.
+
+
+def default_exempt(path: str, value: jnp.ndarray) -> bool:
+    low = path.lower()
+    if value.ndim <= 1:  # vectors (biases, norm scales) — negligible size
+        return True
+    return any(sub in low for sub in DEFAULT_EXEMPT_SUBSTRINGS)
+
+
+def _flatten_with_paths(tree: Params):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp) for kp, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+def quantize_tree(
+    params: Params,
+    delta: jnp.ndarray | float,
+    key: jax.Array,
+    *,
+    exempt: ExemptFn | None = default_exempt,
+) -> Params:
+    """Fake-quantize every non-exempt leaf with per-leaf folded SR keys.
+
+    ``delta`` is the (possibly traced, possibly per-client-scalar) resolution.
+    """
+    paths, leaves, treedef = _flatten_with_paths(params)
+    out = []
+    for idx, (path, leaf) in enumerate(zip(paths, leaves)):
+        if exempt is not None and exempt(path, leaf):
+            out.append(leaf)
+        else:
+            out.append(sr_quantize(leaf, delta, jax.random.fold_in(key, idx)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantizable_size(params: Params, exempt: ExemptFn | None = default_exempt) -> tuple[int, int]:
+    """(quantizable_elements, total_elements) under the exemption policy."""
+    paths, leaves, _ = _flatten_with_paths(params)
+    total = sum(int(l.size) for l in leaves)
+    quant = sum(
+        int(l.size)
+        for p, l in zip(paths, leaves)
+        if not (exempt is not None and exempt(p, l))
+    )
+    return quant, total
+
+
+def expected_quant_mse(w: jnp.ndarray, bits: int) -> float:
+    """Upper bound ``(d/4) * delta^2`` from Lemma 3 (per-tensor, real units)."""
+    wf = jnp.asarray(w, jnp.float32)
+    s = float(tensor_scale(wf))
+    delta = float(delta_from_bits(bits))
+    return wf.size / 4.0 * (s * delta) ** 2

@@ -1,0 +1,3 @@
+from repro.data.partition import dirichlet_partition  # noqa: F401
+from repro.data.synthetic import SyntheticImages, SyntheticTokens  # noqa: F401
+from repro.data.pipeline import ClientBatcher, TokenBatcher  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.fed.simulation import FLSimulation, SimConfig  # noqa: F401
+from repro.fed.orchestrator import FLOrchestrator, OrchestratorConfig  # noqa: F401

@@ -1,0 +1,198 @@
+"""FL round orchestrator: the paper's full control loop, production-shaped.
+
+Per round r:
+  1. channel realization  h_{i,r}  (block fading, :mod:`repro.core.channel`)
+  2. co-design            q, B <- GBD (or a baseline scheme) under the
+     energy/latency/learning constraints (paper §4); strategies are re-solved
+     every ``resolve_every`` rounds (gains are re-drawn each round, the
+     optimizer horizon uses the measured gain window)
+  3. cohort control       straggler deadline (Eq. 26): clients whose
+     comp+comm time exceeds the round budget are dropped THIS round;
+     random client failures (node loss) are masked the same way
+  4. training             one FWQ round on the surviving cohort
+  5. accounting           energy/latency bookkeeping per device
+  6. persistence          checkpoint every k rounds (crash => bit-identical
+     resume: all randomness is folded from (seed, round))
+
+Elasticity: the cohort size may change between rounds (clients join/leave);
+the simulator's jitted round is shape-polymorphic via per-size compile cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable
+
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core import baselines as baselines_mod
+from repro.core.channel import ChannelModel
+from repro.core.convergence import error_budget_bound, quant_noise
+from repro.core.energy import CommParams, DeviceProfile, alpha_coefficients
+from repro.core.gbd import run_gbd
+from repro.core.master import MasterSpec
+from repro.core.primal import PrimalData, solve_primal
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class OrchestratorConfig:
+    n_devices: int
+    n_rounds: int
+    scheme: str = "fwq"              # fwq | full_precision | unified_q | rand_q
+    bits_options: tuple = (8, 16, 32)
+    unified_bits: int = 16
+    b_max_hz: float = 20e6
+    t_max_s: float = 0.0             # 0 => auto (t_factor x min feasible)
+    t_factor: float = 1.5
+    error_tolerance: float = 0.05    # lambda (constraint 23)
+    e2: float = 9.0                  # big-O constant of eps_q
+    model_dim_d: int = 1 << 20       # d in constraint (23)
+    resolve_every: int = 5
+    horizon: int = 4                 # rounds of gains per optimization
+    dropout_prob: float = 0.0        # random client failure rate
+    straggler_slack: float = 1.25    # per-round deadline = slack * planned T_r
+    seed: int = 0
+    ckpt_dir: str = ""
+    ckpt_every: int = 25
+
+
+class FLOrchestrator:
+    def __init__(self, cfg: OrchestratorConfig, fleet: list[DeviceProfile],
+                 mem_capacity_bytes: np.ndarray, grad_bytes: float,
+                 weight_scale: float = 1.0):
+        self.cfg = cfg
+        self.fleet = fleet
+        self.comm = CommParams(b_max_hz=cfg.b_max_hz, grad_bytes=grad_bytes)
+        self.channel = ChannelModel(n_devices=cfg.n_devices, seed=cfg.seed)
+        self.spec = MasterSpec(
+            bits_options=cfg.bits_options,
+            n_devices=cfg.n_devices,
+            error_budget=error_budget_bound(cfg.error_tolerance, cfg.e2,
+                                            cfg.model_dim_d, cfg.n_devices),
+            mem_capacity_bytes=mem_capacity_bytes,
+            model_bytes_fp=4.0 * cfg.model_dim_d,
+            weight_scale=weight_scale,
+        )
+        self._beta1 = np.array([d.beta1 for d in fleet])
+        self._beta2 = np.array([d.beta2 for d in fleet])
+        self._p_comp = np.array([d.runtime_power() for d in fleet])
+        self._p_comm = np.array([d.p_comm for d in fleet])
+        self._strategy: dict | None = None
+        self.energy_log: list[dict] = []
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir, every=cfg.ckpt_every)
+                     if cfg.ckpt_dir else None)
+
+    # ------------------------------------------------------------------
+    def _primal_data(self, round_idx: int) -> PrimalData:
+        gains = np.stack([self.channel.gains(round_idx + h)
+                          for h in range(self.cfg.horizon)])
+        a1 = np.zeros_like(gains)
+        a2 = np.zeros_like(gains)
+        for r in range(self.cfg.horizon):
+            a1[r], a2[r] = alpha_coefficients(gains[r], self._p_comm, self.comm)
+        if self.cfg.t_max_s:
+            t_max = self.cfg.t_max_s * self.cfg.horizon / max(self.cfg.n_rounds, 1)
+        else:
+            from repro.core.primal import _round_tmin
+            tmin = _round_tmin(a2, self._beta1 + 32 * self._beta2, self.cfg.b_max_hz)
+            t_max = float(self.cfg.t_factor * tmin.sum())
+        return PrimalData(alpha1=a1, alpha2=a2, beta1=self._beta1,
+                          beta2=self._beta2, p_comp=self._p_comp,
+                          b_max=self.cfg.b_max_hz, t_max=t_max)
+
+    def resolve(self, round_idx: int) -> dict:
+        """(Re-)run the co-design and cache the strategy."""
+        data = self._primal_data(round_idx)
+        scheme = self.cfg.scheme
+        if scheme == "fwq":
+            res = run_gbd(data, self.spec, max_rounds=30)
+        elif scheme == "full_precision":
+            res = baselines_mod.full_precision(data, self.spec)
+        elif scheme == "unified_q":
+            res = baselines_mod.unified_q(data, self.spec, bits=self.cfg.unified_bits)
+        elif scheme == "rand_q":
+            res = baselines_mod.rand_q(data, self.spec, seed=self.cfg.seed + round_idx)
+        else:
+            raise ValueError(scheme)
+        self._strategy = {"q": res.q, "bandwidth": res.bandwidth,
+                          "t_rounds": res.t_rounds, "energy_plan": res.energy,
+                          "resolved_at": round_idx}
+        return self._strategy
+
+    # ------------------------------------------------------------------
+    def plan_round(self, round_idx: int) -> dict:
+        """Strategy + cohort survival for this round.
+
+        Returns dict with q (bits), surviving cohort mask, per-device energy
+        and the round latency (Eq. 26 bookkeeping).
+        """
+        if (self._strategy is None
+                or round_idx - self._strategy["resolved_at"] >= self.cfg.resolve_every):
+            self.resolve(round_idx)
+        st = self._strategy
+        q = st["q"]
+        h = self._strategy["resolved_at"]
+        B = st["bandwidth"][min(round_idx - h, st["bandwidth"].shape[0] - 1)]
+        gains = self.channel.gains(round_idx)
+        a1, a2 = alpha_coefficients(gains, self._p_comm, self.comm)
+
+        t_comp = self._beta1 + self._beta2 * q
+        t_comm = a2 / B
+        e_comp = self._p_comp * t_comp
+        e_comm = a1 / B
+        t_total = t_comp + t_comm
+
+        planned = st["t_rounds"][min(round_idx - h, len(st["t_rounds"]) - 1)]
+        deadline = self.cfg.straggler_slack * planned
+        rng = np.random.default_rng((self.cfg.seed, round_idx, 77))
+        alive = rng.random(self.cfg.n_devices) >= self.cfg.dropout_prob
+        on_time = t_total <= deadline
+        cohort = alive & on_time
+        if not cohort.any():        # never lose the round entirely
+            cohort = alive if alive.any() else np.ones_like(alive)
+
+        rec = {
+            "round": round_idx, "q": q.copy(), "bandwidth": B.copy(),
+            "t_comp": t_comp, "t_comm": t_comm,
+            "t_round": float(np.max(np.where(cohort, t_total, 0.0))),
+            "e_comp": e_comp, "e_comm": e_comm,
+            "energy_round": float(np.sum(np.where(cohort, e_comp + e_comm, 0.0))),
+            "cohort": cohort, "n_stragglers": int((~on_time).sum()),
+            "n_failed": int((~alive).sum()),
+        }
+        self.energy_log.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------
+    def run(self, sim, batch_fn: Callable[[int, np.ndarray], dict],
+            *, eval_fn: Callable | None = None, eval_every: int = 0) -> dict:
+        """Drive ``sim`` (FLSimulation) for n_rounds with full bookkeeping."""
+        start = 0
+        if self.ckpt is not None:
+            state, start, _ = self.ckpt.restore_or(sim.state())
+            if start:
+                sim.load_state(state, start)
+                log.info("resumed from round %d", start)
+        evals = []
+        for r in range(start, self.cfg.n_rounds):
+            plan = self.plan_round(r)
+            cohort_idx = np.flatnonzero(plan["cohort"])
+            batch = batch_fn(r, cohort_idx)
+            bits = plan["q"][cohort_idx]
+            # elastic cohort: the simulator round is sized by the batch
+            rec = sim.run_round(batch, bits)
+            rec.update(energy=plan["energy_round"], t_round=plan["t_round"],
+                       cohort_size=len(cohort_idx))
+            if eval_fn is not None and eval_every and (r + 1) % eval_every == 0:
+                evals.append({"round": r, **eval_fn(sim)})
+            if self.ckpt is not None:
+                self.ckpt.maybe_save(r + 1, sim.state(), extra={"round": r + 1})
+        total_energy = float(sum(e["energy_round"] for e in self.energy_log))
+        total_time = float(sum(e["t_round"] for e in self.energy_log))
+        return {"history": sim.history, "energy_log": self.energy_log,
+                "evals": evals, "total_energy_j": total_energy,
+                "total_time_s": total_time}

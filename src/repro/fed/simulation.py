@@ -1,0 +1,78 @@
+"""vmap-based FWQ-FL simulator (the paper-experiment path; CPU-friendly).
+
+One jitted round = Algorithm 1 exactly: per-client SR tree-quantization at
+traced resolutions, gradients at quantized weights, full-precision server
+SGD.  Clients map onto the vmapped leading axis; the pod trainer
+(launch/steps.py) is the shard_map twin of this for datacenter scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fwq import FWQConfig, delta_for_clients, make_fwq_round, make_tree_quant_loss
+from repro.optim import Optimizer, build_optimizer
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_clients: int
+    lr: float = 0.05
+    optimizer: str = "sgd"
+    momentum: float = 0.0
+    seed: int = 0
+
+
+class FLSimulation:
+    """Stateful wrapper: holds params/opt, steps one FL round at a time."""
+
+    def __init__(self, loss_fn: Callable, init_fn: Callable, cfg: SimConfig):
+        """loss_fn(params, batch, rng) -> (loss, aux); init_fn(key) -> params."""
+        self.cfg = cfg
+        self.opt: Optimizer = build_optimizer(cfg.optimizer, cfg.lr,
+                                              **({"momentum": cfg.momentum}
+                                                 if cfg.optimizer == "sgd" else {}))
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = init_fn(key)
+        self.opt_state = self.opt.init(self.params)
+        client_loss = make_tree_quant_loss(loss_fn)
+        round_fn = make_fwq_round(client_loss, self.opt.update,
+                                  FWQConfig(n_clients=cfg.n_clients))
+        self._round = jax.jit(round_fn)
+        self.round_idx = 0
+        self.history: list[dict] = []
+
+    def state(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def load_state(self, state, round_idx: int):
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.round_idx = round_idx
+
+    def run_round(self, batch, bits: np.ndarray) -> dict:
+        """batch: leaves with leading dim n_clients; bits: (n_clients,) ints."""
+        delta = delta_for_clients(np.asarray(bits))
+        rng = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), self.round_idx)
+        self.params, self.opt_state, m = self._round(
+            self.params, self.opt_state, batch, delta, rng)
+        rec = {
+            "round": self.round_idx,
+            "loss": float(m.loss),
+            "grad_norm_sq": float(m.grad_norm_sq),
+            "client_loss": np.asarray(m.client_loss),
+            "bits": np.asarray(bits).copy(),
+        }
+        self.history.append(rec)
+        self.round_idx += 1
+        return rec
+
+    def evaluate(self, loss_fn, batch) -> dict:
+        loss, aux = jax.jit(loss_fn)(self.params, batch, jax.random.PRNGKey(0))
+        out = {"loss": float(loss)}
+        out.update({k: float(v) for k, v in aux.items()})
+        return out

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: causal flash attention forward (online softmax).
+
+Lowering target for the 32k-prefill shapes: no S x S materialization; running
+(max, sum, acc) live in VMEM scratch across the KV grid dimension (TPU grids
+execute the last axis sequentially, so scratch carries state between k-steps).
+Fully-masked (k-block above the diagonal) tiles are skipped with ``pl.when``
+— for causal attention that halves the work.
+
+Matches :func:`repro.kernels.ref.flash_attention_ref` to fp32 tolerance.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCKS = (256, 256)  # (block_q, block_k)
+
+_NEG_INF = -1e30
+
+
+def _body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+          *, scale: float, block_q: int, block_k: int, n_k: int, causal: bool):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal skip: this k-block starts after the last query of the q-block
+    run = (not causal) or (ik * block_k <= iq * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           blocks=DEFAULT_BLOCKS, interpret=False):
+    """q, k, v: (BH, S, D) — batch*heads flattened.  Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    bq, bk = blocks
+    bq, bk = min(bq, S), min(bk, S)
+    grid = (BH, pl.cdiv(S, bq), pl.cdiv(S, bk))
+    scale = D ** -0.5
+    return pl.pallas_call(
+        functools.partial(_body, scale=scale, block_q=bq, block_k=bk,
+                          n_k=grid[2], causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,94 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Dispatch policy: real TPU lowering on TPU backends; ``interpret=True``
+(Python-emulated, correctness-checked) elsewhere.  The wrappers also handle
+padding to block multiples and the scalar plumbing the kernels expect.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.quant_matmul import quant_matmul_kernel
+from repro.kernels.sr_quant import sr_quant_fake_kernel, sr_quant_pack_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x, bm, bn, value=0):
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)), constant_values=value)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def sr_quantize_fused(w: jnp.ndarray, key: jax.Array, bits: int):
+    """Fake-quantize a 2-D weight with SR at ``bits`` (kernel-fused path).
+
+    Equivalent to :func:`repro.core.quantization.sr_quantize` with a
+    per-tensor scale; used by benchmarks and (on TPU) the serving packer.
+    """
+    assert w.ndim == 2
+    s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-30)
+    step = (s / (2.0**bits - 1.0)).reshape(1, 1).astype(jnp.float32)
+    u = jax.random.uniform(key, w.shape, dtype=jnp.float32)
+    bm, bn = 256, 512
+    wp, up = _pad2(w.astype(jnp.float32), bm, bn), _pad2(u, bm, bn)
+    out = sr_quant_fake_kernel(wp, up, step, interpret=_interpret())
+    out = out[: w.shape[0], : w.shape[1]]
+    return jnp.clip(out, -s, s).astype(w.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def sr_pack_fused(w: jnp.ndarray, key: jax.Array, bits: int = 7):
+    """Pack a 2-D weight to int8 codes + scalar scale (kernel-fused path)."""
+    assert w.ndim == 2 and bits <= 7
+    s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-30)
+    delta = 1.0 / (2.0**bits - 1.0)
+    step = (s * delta).reshape(1, 1).astype(jnp.float32)
+    u = jax.random.uniform(key, w.shape, dtype=jnp.float32)
+    bm, bn = 256, 512
+    wp, up = _pad2(w.astype(jnp.float32), bm, bn), _pad2(u, bm, bn)
+    codes = sr_quant_pack_kernel(wp, up, step, bits=bits, interpret=_interpret())
+    return codes[: w.shape[0], : w.shape[1]], (s * delta).astype(jnp.float32)
+
+
+@jax.jit
+def quant_matmul(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray):
+    """x (M,K) @ dequant(codes (K,N) int8, scale) with int8 HBM streaming."""
+    M, K = x.shape
+    _, N = codes.shape
+    bm, bn, bk = 256, 256, 512
+    xp = _pad2(x, bm, bk)
+    cp = _pad2(codes, bk, bn)
+    out = quant_matmul_kernel(xp, cp, scale.reshape(1, 1),
+                              interpret=_interpret())
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = True):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D); online-softmax Pallas kernel."""
+    B, H, S, D = q.shape
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, S, D)
+    vf = v.reshape(B * H, S, D)
+    out = flash_attention_kernel(qf, kf, vf, causal=causal,
+                                 interpret=_interpret())
+    return out.reshape(B, H, S, D)
+
+
+# Re-export the oracles for convenience in tests/benchmarks.
+sr_quant_fake_ref = ref.sr_quant_fake_ref
+sr_quant_pack_ref = ref.sr_quant_pack_ref
+quant_matmul_ref = ref.quant_matmul_ref
+flash_attention_ref = ref.flash_attention_ref

@@ -1,0 +1,300 @@
+"""Attention: GQA/MQA/MHA with tensor parallelism over heads.
+
+Three execution paths, all per-shard local code:
+
+* ``full``    — materialized scores; right for short sequences (train_4k smoke).
+* ``chunked`` — online-softmax over key/value chunks (flash-style in pure
+  jnp, ``lax.scan`` over KV blocks): O(S) memory, used for 32k prefill and
+  as the lowering target the Pallas ``flash_attention`` kernel mirrors.
+* ``decode``  — one query token against a KV cache.
+
+Head sharding: q heads are split over the model axis; KV heads are split when
+``n_kv % tp == 0`` and otherwise fully replicated per shard (cheap: KV
+projections are small precisely when n_kv is small).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamCtx, init_dense
+from repro.models.layers import apply_rope, rope_tables, sp_out
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_model: int
+    tp: int
+    causal: bool = True
+    rope_theta: float = 1e4
+    chunk_q: int = 512
+    chunk_kv: int = 1024
+
+    @property
+    def heads_local(self) -> int:
+        assert self.n_heads % self.tp == 0, "q heads must divide tp"
+        return self.n_heads // self.tp
+
+    @property
+    def kv_sharded(self) -> bool:
+        return self.n_kv % self.tp == 0 and self.n_kv >= self.tp
+
+    @property
+    def kv_local(self) -> int:
+        return self.n_kv // self.tp if self.kv_sharded else self.n_kv
+
+    @property
+    def group(self) -> int:
+        """Queries per KV head, in local terms."""
+        return self.heads_local // self.kv_local if self.kv_sharded \
+            else self.n_heads // self.n_kv
+
+
+def init_attention(keys, dims: AttnDims, dtype=jnp.float32, cross: bool = False):
+    d, hd = dims.d_model, dims.head_dim
+    p = {
+        "wq": init_dense(next(keys), d, dims.heads_local * hd, dtype),
+        "wk": init_dense(next(keys), d, dims.kv_local * hd, dtype),
+        "wv": init_dense(next(keys), d, dims.kv_local * hd, dtype),
+        "wo": init_dense(next(keys), dims.heads_local * hd, d, dtype),
+    }
+    return p
+
+
+def _project_qkv(pc: ParamCtx, path, p, x, x_kv, dims: AttnDims, q_pos, kv_pos):
+    B = x.shape[0]
+    q = (x @ pc.use(f"{path}/wq", p["wq"])).reshape(B, -1, dims.heads_local, dims.head_dim)
+    k = (x_kv @ pc.use(f"{path}/wk", p["wk"])).reshape(B, -1, dims.kv_local, dims.head_dim)
+    v = (x_kv @ pc.use(f"{path}/wv", p["wv"])).reshape(B, -1, dims.kv_local, dims.head_dim)
+    if q_pos is not None:  # rope (self-attention only)
+        cq, sq = rope_tables(q_pos, dims.head_dim, dims.rope_theta)
+        ck, sk = rope_tables(kv_pos, dims.head_dim, dims.rope_theta)
+        q = apply_rope(q, cq, sq)
+        k = apply_rope(k, ck, sk)
+    return q, k, v
+
+
+def _expand_kv(k, dims: AttnDims, tp_idx=None):
+    """(B, S, KVl, hd) -> (B, S, Hl, hd): repeat each kv head ``group``x.
+
+    kv-sharded: local kv heads expand to exactly the local q heads.
+    kv-replicated (+tp>1): expand to ALL q heads, then slice this shard's
+    q-head range (``tp_idx`` required).  With tp==1 the slice is identity.
+    """
+    e = jnp.repeat(k, dims.group, axis=2)
+    if dims.kv_sharded or dims.tp == 1:
+        return e
+    if tp_idx is None:
+        return e  # caller wants full heads (seq-parallel decode)
+    return jax.lax.dynamic_slice_in_dim(
+        e, tp_idx * dims.heads_local, dims.heads_local, axis=2)
+
+
+def _full_attention(q, k, v, causal: bool, q_off: int = 0):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd) — materialized scores."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        iq = jnp.arange(q.shape[1])[:, None] + q_off
+        ik = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(ik <= iq, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def _chunked_attention(q, k, v, causal: bool, chunk_kv: int):
+    """Online-softmax over KV chunks (flash-style, O(S) memory).
+
+    Mirrors kernels/flash_attention.py; this is the portable jnp lowering.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    n_chunks = Sk // chunk_kv
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    iq = jnp.arange(Sq)[:, None]
+
+    def body(carry, ci):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ci * chunk_kv, chunk_kv, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ci * chunk_kv, chunk_kv, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, ks.astype(jnp.float32))
+        if causal:
+            ik = ci * chunk_kv + jnp.arange(chunk_kv)[None, :]
+            s = jnp.where(ik <= iq, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vs.astype(jnp.float32))
+        return (m_new, l_new, acc_new), ()
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)  # (B,Sq,H,hd)
+
+
+def self_attention(pc: ParamCtx, path: str, p, x, dims: AttnDims,
+                   *, impl: str = "auto"):
+    """Training/prefill self-attention.  Returns (y, (k, v)) with local KV."""
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    q, k, v = _project_qkv(pc, path, p, x, x, dims, pos, pos)
+    tp_idx = pc.ctx.tp_index()
+    ke, ve = _expand_kv(k, dims, tp_idx), _expand_kv(v, dims, tp_idx)
+    if impl == "auto":
+        impl = "chunked" if S > 4096 else "full"
+    if impl == "chunked":
+        y = _chunked_attention(q, ke, ve, dims.causal, min(dims.chunk_kv, S))
+    else:
+        y = _full_attention(q, ke, ve, dims.causal)
+    B = x.shape[0]
+    y = y.reshape(B, S, dims.heads_local * dims.head_dim)
+    out = y @ pc.use(f"{path}/wo", p["wo"])
+    return sp_out(pc, out), (k, v)
+
+
+def project_cross_kv(pc: ParamCtx, path: str, p, memory, dims: AttnDims):
+    """Precompute cross-attention K/V once (prefill); decode reuses them.
+
+    Recomputing the memory projections per decode token is the difference
+    between useful-compute ratios of ~0.01 and ~1 for VLM/enc-dec serving
+    (EXPERIMENTS.md §Perf cell 3).
+    """
+    B = memory.shape[0]
+    k = (memory @ pc.use(f"{path}/wk", p["wk"])).reshape(
+        B, -1, dims.kv_local, dims.head_dim)
+    v = (memory @ pc.use(f"{path}/wv", p["wv"])).reshape(
+        B, -1, dims.kv_local, dims.head_dim)
+    return k, v
+
+
+def cross_attention_cached(pc: ParamCtx, path: str, p, x, k, v, dims: AttnDims):
+    """Decode-path cross-attention against precomputed K/V."""
+    B = x.shape[0]
+    q = (x @ pc.use(f"{path}/wq", p["wq"])).reshape(
+        B, -1, dims.heads_local, dims.head_dim)
+    tp_idx = pc.ctx.tp_index()
+    y = _full_attention(q, _expand_kv(k.astype(q.dtype), dims, tp_idx),
+                        _expand_kv(v.astype(q.dtype), dims, tp_idx),
+                        causal=False)
+    S = x.shape[1]
+    y = y.reshape(B, S, dims.heads_local * dims.head_dim)
+    return pc.ctx.psum_model(y @ pc.use(f"{path}/wo", p["wo"]))
+
+
+def cross_attention(pc: ParamCtx, path: str, p, x, memory, dims: AttnDims):
+    """Decoder -> encoder/image-memory attention (no causal mask, no rope)."""
+    q, k, v = _project_qkv(pc, path, p, x, memory, dims, None, None)
+    tp_idx = pc.ctx.tp_index()
+    y = _full_attention(q, _expand_kv(k, dims, tp_idx), _expand_kv(v, dims, tp_idx),
+                        causal=False)
+    B, S = x.shape[0], x.shape[1]
+    y = y.reshape(B, S, dims.heads_local * dims.head_dim)
+    return sp_out(pc, y @ pc.use(f"{path}/wo", p["wo"]))
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S_local, KVl, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray     # scalar int32: tokens already cached (global)
+
+
+def kv_cache_seq_parallel(dims: AttnDims) -> bool:
+    """When KV heads are replicated across tp, the cache is sharded over the
+    SEQUENCE dim instead (the 'sequence-parallel KV cache'): without it each
+    model shard would hold the full 32k cache (tens of GB for the 94L archs).
+    """
+    return dims.tp > 1 and not dims.kv_sharded
+
+
+def init_kv_cache(batch: int, s_max: int, dims: AttnDims, dtype=jnp.bfloat16):
+    s_local = s_max // dims.tp if kv_cache_seq_parallel(dims) else s_max
+    shape = (batch, s_local, dims.kv_local, dims.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def decode_self_attention(pc: ParamCtx, path: str, p, x, cache: KVCache,
+                          dims: AttnDims):
+    """One-token decode: x (B, 1, D); returns (y, new_cache).
+
+    Two cache layouts:
+    * kv-sharded (n_kv % tp == 0): cache (B, S_max, KV/tp, hd) — classic.
+    * sequence-parallel: cache (B, S_max/tp, KV, hd); every shard computes
+      partial attention over its sequence slice and the partials merge with a
+      distributed online-softmax (pmax + psum) across the model axis.
+    """
+    seqpar = kv_cache_seq_parallel(dims)
+    pos = cache.length[None]
+    q, k, v = _project_qkv(pc, path, p, x, x, dims, pos, pos)
+    S_loc = cache.k.shape[1]
+    scale = dims.head_dim ** -0.5
+
+    if seqpar:
+        # --- write: only the shard owning global position `length` stores ---
+        tp_idx = pc.ctx.tp_index()
+        owner = cache.length // S_loc
+        local_pos = cache.length - owner * S_loc
+        upd_k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), local_pos, axis=1)
+        upd_v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), local_pos, axis=1)
+        mine = owner == tp_idx
+        knew = jnp.where(mine, upd_k, cache.k)
+        vnew = jnp.where(mine, upd_v, cache.v)
+        # --- partial attention over the local slice ------------------------
+        # Every shard needs ALL q heads against its slice: gather q (one
+        # token — bytes are negligible next to the cache stream).
+        qg = pc.ctx.all_gather_model(q, axis=2)     # (B, 1, H, hd)
+        ke = _expand_kv(knew.astype(q.dtype), dims)  # kv replicated -> H heads
+        ve = _expand_kv(vnew.astype(q.dtype), dims)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qg, ke).astype(jnp.float32) * scale
+        gpos = tp_idx * S_loc + jnp.arange(S_loc)
+        s = jnp.where(gpos[None, None, None, :] <= cache.length, s, -1e30)
+        ax = dims_model_axis(pc)
+        m_loc = jnp.max(s, axis=-1)                                # (B,H,1)
+        m_glob = jax.lax.pmax(m_loc, ax) if ax else m_loc
+        pexp = jnp.exp(s - m_glob[..., None])
+        l_loc = jnp.sum(pexp, axis=-1)
+        acc_loc = jnp.einsum("bhqk,bkhd->bhqd", pexp.astype(q.dtype), ve)
+        l_glob = jax.lax.psum(l_loc, ax) if ax else l_loc
+        acc_glob = jax.lax.psum(acc_loc, ax) if ax else acc_loc
+        y = (acc_glob / jnp.maximum(l_glob, 1e-30)[..., None].astype(q.dtype))
+        y = jnp.transpose(y, (0, 2, 1, 3))                          # (B,1,H,hd)
+        # back to the local q-head slice for the row-parallel wo
+        hl = dims.heads_local
+        y = jax.lax.dynamic_slice_in_dim(y, tp_idx * hl, hl, axis=2)
+    else:
+        knew = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        vnew = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        tp_idx2 = pc.ctx.tp_index()
+        ke = _expand_kv(knew.astype(q.dtype), dims, tp_idx2)
+        ve = _expand_kv(vnew.astype(q.dtype), dims, tp_idx2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * scale
+        mask = jnp.arange(S_loc)[None, None, None, :] <= cache.length
+        s = jnp.where(mask, s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        y = jnp.einsum("bhqk,bkhd->bqhd", w, ve)
+
+    B = x.shape[0]
+    y = y.reshape(B, 1, dims.heads_local * dims.head_dim)
+    out = pc.ctx.psum_model(y @ pc.use(f"{path}/wo", p["wo"]))
+    return out, KVCache(knew, vnew, cache.length + 1)
+
+
+def dims_model_axis(pc: ParamCtx):
+    return pc.ctx.model_axis

@@ -1,0 +1,157 @@
+"""CIFAR-class CNNs for the paper's own evaluation (§5.1).
+
+The paper trains ResNet-34 and MobileNet on CIFAR-10/100.  These are faithful
+reduced-depth analogs in pure JAX (``lax.conv_general_dilated``) sized to run
+hundreds of FL rounds on CPU:
+
+* ``resnet(depth=...)``  — post-activation residual blocks, GroupNorm instead
+  of BatchNorm (batch statistics don't cross FL client boundaries — the
+  standard substitution in FL work; noted in DESIGN.md).
+* ``mobilenet()``        — depthwise-separable stacks.
+
+Used by the vmap-based FL simulator (tree-mode FWQ) — these models are plain
+param-tree functions, no shard_map machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import key_iter
+
+
+def _conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _init_conv(key, kh, kw, cin, cout, groups=1):
+    fan = kh * kw * cin // groups
+    return (jax.random.truncated_normal(key, -2, 2, (kh, kw, cin // groups, cout))
+            * (2.0 / fan) ** 0.5).astype(jnp.float32)
+
+
+def _groupnorm(x, scale, bias, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return xn * scale + bias
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNModel:
+    init: Callable        # key -> params
+    apply: Callable       # (params, images) -> logits
+    name: str
+
+
+def resnet(depth_blocks=(2, 2, 2, 2), width=32, n_classes=10) -> CNNModel:
+    """Reduced ResNet (ResNet-34 uses (3,4,6,3) at width 64)."""
+
+    widths = [width * (2**i) for i in range(len(depth_blocks))]
+
+    def init(key):
+        ks = key_iter(key)
+        p = {"stem": {"w": _init_conv(next(ks), 3, 3, 3, widths[0]),
+                      "gn_s": jnp.ones((widths[0],)), "gn_b": jnp.zeros((widths[0],))}}
+        cin = widths[0]
+        for si, (blocks, cout) in enumerate(zip(depth_blocks, widths)):
+            for bi in range(blocks):
+                blk = {
+                    "conv1": _init_conv(next(ks), 3, 3, cin, cout),
+                    "gn1_s": jnp.ones((cout,)), "gn1_b": jnp.zeros((cout,)),
+                    "conv2": _init_conv(next(ks), 3, 3, cout, cout),
+                    "gn2_s": jnp.ones((cout,)), "gn2_b": jnp.zeros((cout,)),
+                }
+                if cin != cout:
+                    blk["proj"] = _init_conv(next(ks), 1, 1, cin, cout)
+                p[f"s{si}b{bi}"] = blk
+                cin = cout
+        p["head"] = {"w": (jax.random.normal(next(ks), (cin, n_classes)) * 0.01),
+                     "b": jnp.zeros((n_classes,))}
+        return p
+
+    def apply(params, images):
+        x = _conv(images, params["stem"]["w"])
+        x = jax.nn.relu(_groupnorm(x, params["stem"]["gn_s"], params["stem"]["gn_b"]))
+        cin = widths[0]
+        for si, (blocks, cout) in enumerate(zip(depth_blocks, widths)):
+            for bi in range(blocks):
+                blk = params[f"s{si}b{bi}"]
+                stride = 2 if (bi == 0 and si > 0) else 1
+                h = _conv(x, blk["conv1"], stride)
+                h = jax.nn.relu(_groupnorm(h, blk["gn1_s"], blk["gn1_b"]))
+                h = _conv(h, blk["conv2"])
+                h = _groupnorm(h, blk["gn2_s"], blk["gn2_b"])
+                sc = x
+                if "proj" in blk:
+                    sc = _conv(x, blk["proj"], stride)
+                elif stride != 1:
+                    sc = x[:, ::stride, ::stride]
+                x = jax.nn.relu(h + sc)
+                cin = cout
+        x = x.mean(axis=(1, 2))
+        return x @ params["head"]["w"] + params["head"]["b"]
+
+    return CNNModel(init=init, apply=apply, name=f"resnet{sum(depth_blocks)*2+2}")
+
+
+def mobilenet(width=24, n_stages=4, n_classes=10) -> CNNModel:
+    """Depthwise-separable stack (MobileNetV1 style, reduced)."""
+
+    def init(key):
+        ks = key_iter(key)
+        p = {"stem": {"w": _init_conv(next(ks), 3, 3, 3, width),
+                      "gn_s": jnp.ones((width,)), "gn_b": jnp.zeros((width,))}}
+        cin = width
+        for i in range(n_stages):
+            cout = width * (2 ** (i // 2 + 1))
+            p[f"dw{i}"] = {
+                "dw": _init_conv(next(ks), 3, 3, cin, cin, groups=cin),
+                "gn1_s": jnp.ones((cin,)), "gn1_b": jnp.zeros((cin,)),
+                "pw": _init_conv(next(ks), 1, 1, cin, cout),
+                "gn2_s": jnp.ones((cout,)), "gn2_b": jnp.zeros((cout,)),
+            }
+            cin = cout
+        p["head"] = {"w": (jax.random.normal(next(ks), (cin, n_classes)) * 0.01),
+                     "b": jnp.zeros((n_classes,))}
+        return p
+
+    def apply(params, images):
+        x = _conv(images, params["stem"]["w"])
+        x = jax.nn.relu(_groupnorm(x, params["stem"]["gn_s"], params["stem"]["gn_b"]))
+        cin = x.shape[-1]
+        i = 0
+        while f"dw{i}" in params:
+            blk = params[f"dw{i}"]
+            stride = 2 if i % 2 == 1 else 1
+            x = _conv(x, blk["dw"], stride, groups=x.shape[-1])
+            x = jax.nn.relu(_groupnorm(x, blk["gn1_s"], blk["gn1_b"]))
+            x = _conv(x, blk["pw"])
+            x = jax.nn.relu(_groupnorm(x, blk["gn2_s"], blk["gn2_b"]))
+            i += 1
+        x = x.mean(axis=(1, 2))
+        return x @ params["head"]["w"] + params["head"]["b"]
+
+    return CNNModel(init=init, apply=apply, name="mobilenet")
+
+
+def xent_loss(model: CNNModel):
+    def loss_fn(params, batch, rng):
+        logits = model.apply(params, batch["x"])
+        ls = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(ls, batch["y"][:, None], axis=-1).mean()
+        acc = (jnp.argmax(logits, -1) == batch["y"]).mean()
+        return nll, {"acc": acc}
+    return loss_fn

@@ -1,0 +1,303 @@
+"""Shared machinery for the manual-sharding model zoo.
+
+Models are written as **local per-shard code with explicit collectives**
+(Megatron-JAX style; see DESIGN.md §4/§7) and run under one ``jax.shard_map``
+over the whole mesh.  The two cross-cutting concerns are factored here:
+
+* :class:`ParamCtx` — every weight is *used* through ``pc.use(path, w)``,
+  which (1) all-gathers FSDP-sharded storage, (2) applies the active weight
+  transform — identity, per-client SR quantization (FWQ Algorithm 1 line 4),
+  or int8 dequantization on the serving path — and (3) casts to the compute
+  dtype.  Autodiff through the tiled all-gather transposes to a
+  reduce-scatter, so FSDP gradients come back sharded for free.
+* :class:`QTensor` — packed int8/int16 codes + scale, the real quantized
+  storage used by serving (streams 1/4 the HBM bytes of f32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.collectives import AxisCtx
+
+Transform = Callable[[str, jnp.ndarray], jnp.ndarray]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Quantized parameter storage: ``w ~= codes * scale`` (scale folds delta)."""
+
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def ndim(self):
+        return self.codes.ndim
+
+    @property
+    def size(self):
+        return self.codes.size
+
+    @property
+    def dtype(self):
+        return self.codes.dtype
+
+
+def dequant(q: QTensor, dtype) -> jnp.ndarray:
+    return q.codes.astype(jnp.float32).astype(dtype) * q.scale.astype(dtype)
+
+
+#: Minimum product of the NON-sharded dims for FSDP participation.  This
+#: criterion is invariant under sharding of the rule dim, so init-time and
+#: use-time decisions agree by construction.
+FSDP_MIN_OTHER = 256
+
+#: Path fragments never FSDP-sharded (used via ``use_small`` — no gather).
+FSDP_EXCLUDE = ("router", "conv_", "a_log", "dt_bias", "d_skip", "/ln", "norm",
+                "gate_scalar")
+
+#: Stack prefixes: leaves under these carry a leading scanned-layer dim.
+STACK_PREFIXES = ("blocks/", "periods/", "encoder/", "decoder/")
+
+
+def fsdp_shard_dim(path: str, ndim: int) -> int:
+    """Deterministic FSDP shard dim for a parameter (init & use must agree).
+
+    ``ndim`` is the per-layer view (stack dim already stripped).  Default:
+    second-to-last dim (the d_model-like dim, divisible by the fsdp size for
+    every assigned arch).  Exceptions shard the last dim where the default is
+    not guaranteed divisible: embedding tables (vocab rows padded to tp only)
+    and row-parallel ``w_down`` (d_ff/tp rows).
+    """
+    if path.endswith("/table") or "w_down" in path:
+        return ndim - 1
+    return ndim - 2
+
+
+def is_stacked(path: str) -> bool:
+    return any(p in path for p in STACK_PREFIXES)
+
+
+def fsdp_participates(path: str, per_layer_shape: tuple[int, ...], fsdp: int) -> bool:
+    """Single source of truth for FSDP participation.
+
+    Works on either the stored (sharded) or global per-layer shape: the
+    criterion only reads the dims that sharding does not touch.
+    """
+    if fsdp <= 1 or len(per_layer_shape) < 2:
+        return False
+    if any(x in path for x in FSDP_EXCLUDE):
+        return False
+    dim = fsdp_shard_dim(path, len(per_layer_shape))
+    other = 1
+    for i, s in enumerate(per_layer_shape):
+        if i != dim:
+            other *= s
+    return other >= FSDP_MIN_OTHER
+
+
+@dataclasses.dataclass
+class ParamCtx:
+    """Threads mesh context + weight transform through model code.
+
+    ``sp``: Megatron-style sequence parallelism — activations between blocks
+    are sharded over the model axis on the sequence dim; block inputs are
+    all-gathered and block outputs reduce-scattered (same wire bytes as the
+    all-reduce they replace, but layer residuals are stored 1/tp as large —
+    required for the 94-100 layer archs to fit HBM).
+
+    ``gather_dtype``: cast parameters to this dtype BEFORE the FSDP
+    all-gather (e.g. bf16 halves gather bytes; §Perf knob).
+    """
+
+    ctx: AxisCtx
+    transform: Transform | None = None
+    compute_dtype: Any = jnp.bfloat16
+    sp: bool = False
+    gather_dtype: Any = None
+
+    def is_fsdp(self, path: str, w) -> bool:
+        """w is the *stored local* leaf (per-layer view inside a scan)."""
+        leaf = w.codes if isinstance(w, QTensor) else w
+        return fsdp_participates(path, leaf.shape, self.ctx.fsdp)
+
+    def use(self, path: str, w, *, gathered_dim: int | None = None) -> jnp.ndarray:
+        """Gather + transform + cast: the single funnel every weight goes through."""
+        nd = (w.codes if isinstance(w, QTensor) else w).ndim
+        dim = fsdp_shard_dim(path, nd) if gathered_dim is None else gathered_dim
+        gather = self.is_fsdp(path, w)
+        if isinstance(w, QTensor):
+            codes = self.ctx.gather_fsdp(w.codes, axis=dim) if gather else w.codes
+            full = codes.astype(jnp.float32) * w.scale.astype(jnp.float32)
+        else:
+            full = w
+            if gather:
+                if self.gather_dtype is not None:
+                    full = full.astype(self.gather_dtype)
+                full = self.ctx.gather_fsdp(full, axis=dim)
+        if self.transform is not None:
+            full = self.transform(path, full)
+        return full.astype(self.compute_dtype)
+
+    def use_small(self, path: str, w) -> jnp.ndarray:
+        """Replicated small parameters (norm scales, biases): no gather."""
+        if self.transform is not None:
+            w = self.transform(path, w)
+        return w.astype(self.compute_dtype)
+
+
+def _key_name(k) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def tree_paths_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QTensor))
+    paths = ["/".join(_key_name(k) for k in kp) for kp, _ in flat]
+    return paths, [v for _, v in flat], treedef
+
+
+def fsdp_plan(params, fsdp: int, *, check_divisibility: bool = True):
+    """Per-leaf FSDP dim (in stored-array coords) or None.  Shared by the
+    init-time shard pass, the gradient reduction, and the launcher's
+    in_specs builder.
+
+    ``check_divisibility`` must be True only when ``params`` carries the
+    UNSHARDED (pre-slice) shapes — stored/sharded trees have the rule dim
+    already divided and would trip the check spuriously."""
+    paths, leaves, treedef = tree_paths_leaves(params)
+    plan = []
+    for path, leaf in zip(paths, leaves):
+        arr = leaf.codes if isinstance(leaf, QTensor) else leaf
+        stacked = is_stacked(path)
+        eff_ndim = arr.ndim - 1 if stacked else arr.ndim
+        shape = arr.shape[1:] if stacked else arr.shape
+        if not fsdp_participates(path, shape, fsdp):
+            plan.append(None)
+            continue
+        dim = fsdp_shard_dim(path, eff_ndim) + (1 if stacked else 0)
+        if check_divisibility and arr.shape[dim] % fsdp != 0:
+            raise ValueError(
+                f"FSDP-eligible param {path} shape {arr.shape} not divisible by "
+                f"fsdp={fsdp} on dim {dim}; adjust fsdp_shard_dim rule")
+        plan.append(dim)
+    return paths, leaves, treedef, plan
+
+
+def apply_fsdp_sharding(params, pc: "ParamCtx", fsdp: int | None = None):
+    """Slice each FSDP-eligible leaf to this shard's portion.
+
+    Runs inside shard_map (dp_index traced) or under eval_shape probes —
+    pass ``fsdp`` explicitly in the latter case (axis sizes are invisible
+    outside shard_map)."""
+    n_fsdp = fsdp if fsdp is not None else pc.ctx.fsdp
+    paths, leaves, treedef, plan = fsdp_plan(params, n_fsdp)
+    idx = pc.ctx.dp_index()
+    out = []
+    for leaf, dim in zip(leaves, plan):
+        if dim is None:
+            out.append(leaf)
+            continue
+        arr = leaf.codes if isinstance(leaf, QTensor) else leaf
+        size = arr.shape[dim] // n_fsdp
+        piece = jax.lax.dynamic_slice_in_dim(arr, idx * size, size, axis=dim)
+        out.append(QTensor(piece, leaf.scale) if isinstance(leaf, QTensor) else piece)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def reduce_gradients(grads, params_template, ctx: AxisCtx):
+    """Server-side gradient mean (Algorithm 1 line 10) respecting FSDP layout.
+
+    FSDP leaves arrive already *summed* across the fsdp axes (the transpose of
+    the tiled all-gather is a reduce-scatter): divide by dp.  Replicated
+    leaves need the explicit ``pmean`` over the batch axes.
+    """
+    paths, leaves, treedef, plan = fsdp_plan(params_template, ctx.fsdp,
+                                             check_divisibility=False)
+    gleaves = jax.tree_util.tree_leaves(
+        grads, is_leaf=lambda x: isinstance(x, QTensor))
+    out = []
+    for g, dim in zip(gleaves, plan):
+        if dim is not None:
+            out.append(g / ctx.dp)
+        else:
+            out.append(jax.lax.pmean(g, tuple(ctx.batch_axes)) if ctx.batch_axes
+                       else g)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun)."""
+    std = scale if scale is not None else (1.0 / d_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * std).astype(dtype)
+
+
+def init_embed(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def key_iter(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# ---------------------------------------------------------------------------
+# Serving-path packing
+# ---------------------------------------------------------------------------
+
+
+def pack_params_for_serving(params, bits: int, key, *, exempt) -> Any:
+    """Convert matmul weights to :class:`QTensor` int8/int16 storage.
+
+    Deterministic nearest rounding (serving wants reproducibility; the SR
+    unbiasedness argument matters for *training* — see paper §2.1).
+    """
+    from repro.core.quantization import storage_dtype
+
+    paths, leaves, treedef = tree_paths_leaves(params)
+    out = []
+    for path, leaf in zip(paths, leaves):
+        if exempt is not None and exempt(path, leaf):
+            out.append(leaf)
+            continue
+        delta = 1.0 / (2.0**bits - 1.0)
+        lim = 2**bits - 1
+        wf = leaf.astype(jnp.float32)
+        if is_stacked(path) and leaf.ndim >= 2:
+            # per-layer scales so scanned stacks slice cleanly (and tighter)
+            red = tuple(range(1, leaf.ndim))
+            s = jnp.maximum(jnp.max(jnp.abs(wf), axis=red), 1e-12)
+            scale = (s * delta).astype(jnp.float32)          # (L,)
+            sb = scale.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        else:
+            s = jnp.maximum(jnp.max(jnp.abs(wf)), 1e-12)
+            scale = (s * delta).astype(jnp.float32)          # ()
+            sb = scale
+        codes = jnp.clip(jnp.round(wf / sb), -lim, lim).astype(storage_dtype(bits))
+        out.append(QTensor(codes=codes, scale=scale))
+    return jax.tree_util.tree_unflatten(treedef, out)

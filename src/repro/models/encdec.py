@@ -1,0 +1,165 @@
+"""Encoder-decoder backbone (seamless-m4t class).
+
+The modality frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed audio-frame embeddings ``(B, S_src, d_frontend)``; a linear
+adapter projects them into the encoder width.  Text decoding is a standard
+causal decoder with cross-attention into the encoder memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import (
+    AttnDims, KVCache, cross_attention, cross_attention_cached,
+    decode_self_attention, init_attention, init_kv_cache, project_cross_kv,
+    self_attention,
+)
+from repro.models.common import ParamCtx, init_dense, key_iter
+from repro.models.transformer import attn_dims, padded_vocab_local, _stack
+
+
+def init_encdec(cfg: ModelConfig, key, tp: int, dtype=jnp.float32) -> dict:
+    ks = key_iter(key)
+    ad_self = attn_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    d_front = cfg.d_frontend or cfg.d_model
+
+    def enc_layer(_):
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": init_attention(ks, ad_self, dtype),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(ks, cfg.d_model, cfg.d_ff // tp, cfg.mlp_act, dtype),
+        }
+
+    def dec_layer(_):
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "self": init_attention(ks, ad_self, dtype),
+            "ln_x": L.init_rmsnorm(cfg.d_model),
+            "cross": init_attention(ks, ad_self, dtype),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(ks, cfg.d_model, cfg.d_ff // tp, cfg.mlp_act, dtype),
+        }
+
+    return {
+        "adapter": init_dense(next(ks), d_front, cfg.d_model, dtype),
+        "encoder": _stack([enc_layer(i) for i in range(cfg.n_encoder_layers)]),
+        "enc_norm": L.init_rmsnorm(cfg.d_model),
+        "embed": {"table": L.init_vocab_embed(next(ks), vl, cfg.d_model, dtype)},
+        "decoder": _stack([dec_layer(i) for i in range(cfg.n_layers)]),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "unembed": {"w": init_dense(next(ks), cfg.d_model, vl, dtype)},
+    }
+
+
+def encode(cfg: ModelConfig, pc: ParamCtx, params, frames, *, attn_impl="auto"):
+    """frames: (B, S_src, d_frontend) stub embeddings -> memory (B,S_src,D)."""
+    ad = attn_dims(cfg, tp=pc.ctx.tp, causal=False)
+    x = frames.astype(pc.compute_dtype) @ pc.use("adapter", params["adapter"])
+    x = L.sp_out(pc, x) if (pc.sp and pc.ctx.tp > 1) else x
+
+    def layer(x, lp):
+        h = L.sp_gather(pc, L.rmsnorm(pc, "enc/ln1", lp["ln1"], x, cfg.norm_eps))
+        a, _ = self_attention(pc, "enc/attn", lp["attn"], h, ad, impl=attn_impl)
+        x = x + a
+        h = L.sp_gather(pc, L.rmsnorm(pc, "enc/ln2", lp["ln2"], x, cfg.norm_eps))
+        return x + L.mlp(pc, "enc/mlp", lp["mlp"], h, cfg.mlp_act), ()
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    x, _ = jax.lax.scan(layer, x, params["encoder"])
+    return L.sp_gather(pc, L.rmsnorm(pc, "enc_norm", params["enc_norm"], x, cfg.norm_eps))
+
+
+def decode_train(cfg: ModelConfig, pc: ParamCtx, params, memory, tokens,
+                 *, attn_impl="auto", return_hidden=False):
+    tp = pc.ctx.tp
+    ad = attn_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], tokens, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def layer(x, lp):
+        h = L.sp_gather(pc, L.rmsnorm(pc, "dec/ln1", lp["ln1"], x, cfg.norm_eps))
+        a, _ = self_attention(pc, "dec/self", lp["self"], h, ad, impl=attn_impl)
+        x = x + a
+        h = L.sp_gather(pc, L.rmsnorm(pc, "dec/ln_x", lp["ln_x"], x, cfg.norm_eps))
+        x = x + cross_attention(pc, "dec/cross", lp["cross"], h, memory, ad)
+        h = L.sp_gather(pc, L.rmsnorm(pc, "dec/ln2", lp["ln2"], x, cfg.norm_eps))
+        return x + L.mlp(pc, "dec/mlp", lp["mlp"], h, cfg.mlp_act), ()
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    x, _ = jax.lax.scan(layer, x, params["decoder"])
+    x = L.sp_gather(pc, L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps))
+    if return_hidden:
+        return x
+    return L.vocab_logits(pc, "unembed", params["unembed"]["w"], x)
+
+
+def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto"):
+    memory = encode(cfg, pc, params, batch["frames"], attn_impl=attn_impl)
+    x = decode_train(cfg, pc, params, memory, batch["tokens"],
+                     attn_impl=attn_impl, return_hidden=True)
+    vl = padded_vocab_local(cfg, pc.ctx.tp)
+    loss = L.fused_vocab_xent(pc, "unembed/w", params["unembed"]["w"], x,
+                              batch["labels"], vl)
+    return loss, {}
+
+
+def init_decoder_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
+                        dtype=jnp.bfloat16):
+    ad = attn_dims(cfg, tp)
+    one = init_kv_cache(batch, s_max, ad, dtype)
+    self_caches = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+    # precomputed cross K/V over the encoder memory (filled at prefill via
+    # fill_cross_caches; zeros are shape stand-ins)
+    kv_shape = (cfg.n_layers, batch, s_max, ad.kv_local, ad.head_dim)
+    return {"self": self_caches,
+            "cross_k": jnp.zeros(kv_shape, dtype),
+            "cross_v": jnp.zeros(kv_shape, dtype)}
+
+
+def fill_cross_caches(cfg: ModelConfig, pc, params, memory, caches):
+    ad = attn_dims(cfg, pc.ctx.tp)
+
+    def body(_, lp):
+        k, v = project_cross_kv(pc, "dec/cross", lp["cross"], memory, ad)
+        return (), (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, (), params["decoder"])
+    return {**caches, "cross_k": ks.astype(caches["cross_k"].dtype),
+            "cross_v": vs.astype(caches["cross_v"].dtype)}
+
+
+def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
+    """One decoder token against cached self-attn KV + cached cross K/V."""
+    tp = pc.ctx.tp
+    ad = attn_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def layer(x, scanned):
+        lp, cache, ck, cv = scanned
+        h = L.rmsnorm(pc, "dec/ln1", lp["ln1"], x, cfg.norm_eps)
+        a, nc = decode_self_attention(pc, "dec/self", lp["self"], h, cache, ad)
+        x = x + a
+        h = L.rmsnorm(pc, "dec/ln_x", lp["ln_x"], x, cfg.norm_eps)
+        x = x + cross_attention_cached(pc, "dec/cross", lp["cross"], h, ck, cv, ad)
+        h = L.rmsnorm(pc, "dec/ln2", lp["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(pc, "dec/mlp", lp["mlp"], h, cfg.mlp_act), nc
+
+    x, new_self = jax.lax.scan(
+        layer, x, (params["decoder"], caches["self"],
+                   caches["cross_k"], caches["cross_v"]))
+    x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
+    logits = L.vocab_logits(pc, "unembed", params["unembed"]["w"], x)
+    return logits, {"self": new_self, "cross_k": caches["cross_k"],
+                    "cross_v": caches["cross_v"]}

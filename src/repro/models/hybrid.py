@@ -1,0 +1,186 @@
+"""Jamba-style hybrid: Mamba2 + attention (1:`attn_period`) with periodic MoE.
+
+Layer pattern (period = ``attn_period``, default 8):
+    sublayer 0:        attention mixer
+    sublayers 1..p-1:  mamba2 (SSD) mixers
+    ffn of sublayer j: MoE when the *global* layer index hits ``moe_period``,
+                       dense MLP otherwise (jamba: every 2nd layer is MoE).
+
+The outer ``lax.scan`` runs over periods (72 layers -> 9 iterations); the 8
+sublayers inside a period are unrolled, which keeps the HLO small while
+allowing the heterogeneous structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import (
+    KVCache, decode_self_attention, init_attention, init_kv_cache, self_attention,
+)
+from repro.models.common import ParamCtx, init_dense, key_iter
+from repro.models.moe import init_moe, moe_block
+from repro.models.ssm import (
+    SSMCache, SSMDims, init_ssm, init_ssm_cache, ssm_block, ssm_decode_step,
+)
+from repro.models.transformer import attn_dims, moe_dims, padded_vocab_local, _stack
+
+
+def ssm_dims(cfg: ModelConfig, tp: int) -> SSMDims:
+    return SSMDims(
+        d_model=cfg.d_model, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+        expand=cfg.ssm_expand, conv_width=cfg.ssm_conv_width,
+        chunk=cfg.ssm_chunk, tp=tp,
+    )
+
+
+def _layer_kinds(cfg: ModelConfig):
+    """Per-sublayer (mixer, ffn) kinds within one period."""
+    p = cfg.attn_period
+    kinds = []
+    for j in range(p):
+        mixer = "attn" if j == 0 else "ssm"
+        ffn = "moe" if (j % max(cfg.moe_period, 1)) == 0 and cfg.n_experts else "mlp"
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+def init_hybrid(cfg: ModelConfig, key, tp: int, dtype=jnp.float32) -> dict:
+    assert cfg.n_layers % cfg.attn_period == 0
+    n_periods = cfg.n_layers // cfg.attn_period
+    ks = key_iter(key)
+    ad = attn_dims(cfg, tp)
+    sd = ssm_dims(cfg, tp)
+    md = moe_dims(cfg, tp)
+    kinds = _layer_kinds(cfg)
+    vl = padded_vocab_local(cfg, tp)
+
+    def one_period(_):
+        subs = []
+        for mixer, ffn in kinds:
+            sp = {"ln1": L.init_rmsnorm(cfg.d_model), "ln2": L.init_rmsnorm(cfg.d_model)}
+            sp["mixer"] = (init_attention(ks, ad, dtype) if mixer == "attn"
+                           else init_ssm(ks, sd, dtype))
+            sp["ffn"] = (init_moe(ks, md, dtype) if ffn == "moe"
+                         else L.init_mlp(ks, cfg.d_model, cfg.d_ff // tp, cfg.mlp_act, dtype))
+            subs.append(sp)
+        return {f"sub{j}": s for j, s in enumerate(subs)}
+
+    return {
+        "embed": {"table": L.init_vocab_embed(next(ks), vl, cfg.d_model, dtype)},
+        "periods": _stack([one_period(i) for i in range(n_periods)]),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "unembed": {"w": init_dense(next(ks), cfg.d_model, vl, dtype)},
+    }
+
+
+def _period_fn(cfg: ModelConfig, pc: ParamCtx, tp: int, attn_impl: str):
+    ad = attn_dims(cfg, tp)
+    sd = ssm_dims(cfg, tp)
+    md = moe_dims(cfg, tp)
+    kinds = _layer_kinds(cfg)
+
+    def period(x, pp):
+        for j, (mixer, ffn) in enumerate(kinds):
+            sp = pp[f"sub{j}"]
+            h = L.sp_gather(pc, L.rmsnorm(pc, f"sub{j}/ln1", sp["ln1"], x, cfg.norm_eps))
+            if mixer == "attn":
+                a, _ = self_attention(pc, f"sub{j}/attn", sp["mixer"], h, ad,
+                                      impl=attn_impl)
+            else:
+                a = ssm_block(pc, f"sub{j}/ssm", sp["mixer"], h, sd)
+            x = x + a
+            h = L.sp_gather(pc, L.rmsnorm(pc, f"sub{j}/ln2", sp["ln2"], x, cfg.norm_eps))
+            if ffn == "moe":
+                m, _ = moe_block(pc, f"sub{j}/moe", sp["ffn"], h, md)
+            else:
+                m = L.mlp(pc, f"sub{j}/mlp", sp["ffn"], h, cfg.mlp_act)
+            x = x + m
+        return x, ()
+
+    return period
+
+
+def forward(cfg: ModelConfig, pc: ParamCtx, params, tokens, *, attn_impl="auto", return_hidden=False):
+    tp = pc.ctx.tp
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], tokens, vl)
+    x = x.astype(pc.compute_dtype)
+    period = _period_fn(cfg, pc, tp, attn_impl)
+    if cfg.remat:
+        period = jax.checkpoint(period, prevent_cse=False)
+    x, _ = jax.lax.scan(period, x, params["periods"])
+    x = L.sp_gather(pc, L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps))
+    if return_hidden:
+        return x
+    return L.vocab_logits(pc, "unembed", params["unembed"]["w"], x)
+
+
+def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto"):
+    x = forward(cfg, pc, params, batch["tokens"], attn_impl=attn_impl,
+                return_hidden=True)
+    vl = padded_vocab_local(cfg, pc.ctx.tp)
+    loss = L.fused_vocab_xent(pc, "unembed/w", params["unembed"]["w"], x,
+                              batch["labels"], vl)
+    return loss, {}
+
+
+# ---------------------------------------------------------------------------
+# Decode: attention sublayers carry a KV cache, mamba sublayers an SSM state.
+# ---------------------------------------------------------------------------
+
+
+def init_hybrid_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
+                       dtype=jnp.bfloat16):
+    n_periods = cfg.n_layers // cfg.attn_period
+    ad = attn_dims(cfg, tp)
+    sd = ssm_dims(cfg, tp)
+    kinds = _layer_kinds(cfg)
+    caches = {}
+    for j, (mixer, _ffn) in enumerate(kinds):
+        one = (init_kv_cache(batch, s_max, ad, dtype) if mixer == "attn"
+               else init_ssm_cache(batch, sd, dtype))
+        caches[f"sub{j}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), one)
+    return caches
+
+
+def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
+    tp = pc.ctx.tp
+    ad = attn_dims(cfg, tp)
+    sd = ssm_dims(cfg, tp)
+    md = moe_dims(cfg, tp)
+    kinds = _layer_kinds(cfg)
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def period(x, scanned):
+        pp, pcache = scanned
+        new_caches = {}
+        for j, (mixer, ffn) in enumerate(kinds):
+            sp = pp[f"sub{j}"]
+            h = L.rmsnorm(pc, f"sub{j}/ln1", sp["ln1"], x, cfg.norm_eps)
+            if mixer == "attn":
+                a, nc = decode_self_attention(pc, f"sub{j}/attn", sp["mixer"], h,
+                                              pcache[f"sub{j}"], ad)
+            else:
+                a, nc = ssm_decode_step(pc, f"sub{j}/ssm", sp["mixer"], h,
+                                        pcache[f"sub{j}"], sd)
+            new_caches[f"sub{j}"] = nc
+            x = x + a
+            h = L.rmsnorm(pc, f"sub{j}/ln2", sp["ln2"], x, cfg.norm_eps)
+            if ffn == "moe":
+                m, _ = moe_block(pc, f"sub{j}/moe", sp["ffn"], h, md)
+            else:
+                m = L.mlp(pc, f"sub{j}/mlp", sp["ffn"], h, cfg.mlp_act)
+            x = x + m
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(period, x, (params["periods"], caches))
+    x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
+    logits = L.vocab_logits(pc, "unembed", params["unembed"]["w"], x)
+    return logits, new_caches

@@ -1,0 +1,212 @@
+"""Building-block layers: norms, rotary embeddings, parallel MLPs, embeddings.
+
+Tensor-parallel conventions (Megatron style, executed inside shard_map):
+
+* activations ``x: (B, S, D)`` are replicated across the ``model`` axis and
+  local (per-client) along the batch axes;
+* column-parallel weights shard their *output* dim over ``model``;
+  row-parallel weights shard their *input* dim and are followed by a
+  ``psum`` over the model axis;
+* vocab-parallel embedding/unembedding shard the vocabulary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamCtx, init_dense, init_embed
+
+
+# ---------------------------------------------------------------------------
+# Sequence parallelism boundaries (Megatron-SP)
+# ---------------------------------------------------------------------------
+
+
+def sp_gather(pc: ParamCtx, x):
+    """(B, S/tp, D) -> (B, S, D) at a block input (no-op when sp off/tp==1)."""
+    if pc.sp and pc.ctx.model_axis and pc.ctx.tp > 1:
+        return pc.ctx.all_gather_model(x, axis=1)
+    return x
+
+
+def sp_out(pc: ParamCtx, y):
+    """Block-output combine: reduce-scatter over seq when SP, else all-reduce."""
+    if pc.sp and pc.ctx.model_axis and pc.ctx.tp > 1:
+        return pc.ctx.psum_scatter_model(y, axis=1)
+    return pc.ctx.psum_model(y)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(pc: ParamCtx, path: str, scale, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + pc.use_small(path, scale).astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype)  # stored as (scale - 1): zero-init
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int, theta: float):
+    """cos/sin tables, f32.  positions: (...,) int32 -> (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (..., S, n_heads, head_dim); cos/sin: (S, head_dim/2) (broadcast)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parallel MLP (SwiGLU / GeGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(keys, d: int, d_ff_local: int, act: str, dtype=jnp.float32):
+    p = {
+        "w_up": init_dense(next(keys), d, d_ff_local, dtype),
+        "w_down": init_dense(next(keys), d_ff_local, d, dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = init_dense(next(keys), d, d_ff_local, dtype)
+    return p
+
+
+def mlp(pc: ParamCtx, path: str, p, x, act: str):
+    """Column-parallel up/gate, row-parallel down (+psum over model)."""
+    up = x @ pc.use(f"{path}/w_up", p["w_up"])
+    if act == "swiglu":
+        gate = x @ pc.use(f"{path}/w_gate", p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    elif act == "geglu":
+        gate = x @ pc.use(f"{path}/w_gate", p["w_gate"])
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    y = h @ pc.use(f"{path}/w_down", p["w_down"])
+    return sp_out(pc, y)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel embedding / unembedding / cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def init_vocab_embed(key, vocab_local: int, d: int, dtype=jnp.float32):
+    return init_embed(key, vocab_local, d, dtype)
+
+
+def vocab_embed(pc: ParamCtx, path: str, table, ids: jnp.ndarray, vocab_local: int):
+    """ids: (B, S) global token ids; table: (V/tp, D) local shard."""
+    tp_idx = pc.ctx.tp_index()
+    lo = tp_idx * vocab_local
+    local = ids - lo
+    in_range = (local >= 0) & (local < vocab_local)
+    safe = jnp.clip(local, 0, vocab_local - 1)
+    t = pc.use(f"{path}/table", table)
+    e = jnp.take(t, safe, axis=0)
+    e = jnp.where(in_range[..., None], e, jnp.zeros_like(e))
+    return sp_out(pc, e)
+
+
+def vocab_logits(pc: ParamCtx, path: str, w_unembed, x):
+    """x: (B, S, D) -> local logits (B, S, V/tp)."""
+    return x @ pc.use(f"{path}/w", w_unembed)
+
+
+def vocab_parallel_xent(pc: ParamCtx, local_logits, labels, vocab_local: int,
+                        *, ignore_id: int = -1):
+    """Cross-entropy over vocab-sharded logits without gathering the vocab.
+
+    Stable log-softmax via pmax/psum over the model axis.  labels: (B, S).
+    Returns (mean_loss, n_tokens).
+    """
+    lg = local_logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1))
+    if pc.ctx.model_axis and pc.ctx.tp > 1:
+        m = jax.lax.pmax(m, pc.ctx.model_axis)
+    z = jnp.exp(lg - m[..., None])
+    denom = pc.ctx.psum_model(jnp.sum(z, axis=-1))
+    tp_idx = pc.ctx.tp_index()
+    lo = tp_idx * vocab_local
+    local = labels - lo
+    in_range = (local >= 0) & (local < vocab_local)
+    safe = jnp.clip(local, 0, vocab_local - 1)
+    picked = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+    picked = jnp.where(in_range, picked, 0.0)
+    picked = pc.ctx.psum_model(picked)          # the true-class logit
+    nll = jnp.log(denom) + m - picked
+    valid = labels != ignore_id
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(jnp.where(valid, nll, 0.0)) / n, n
+
+
+def fused_vocab_xent(pc: ParamCtx, path: str, w_unembed, x, labels,
+                     vocab_local: int, *, chunk: int = 512, ignore_id: int = -1):
+    """Unembed + vocab-parallel cross-entropy, chunked over the sequence.
+
+    Never materializes the full (B, S, V/tp) logits — each seq chunk's logits
+    live only inside a rematerialized scan body (65-500k-seq safe).
+    x: (B, S, D) full-seq activations; labels: (B, S).  Returns mean loss.
+    """
+    w = pc.use(path, w_unembed)               # FSDP gather once, outside scan
+    B, S, D = x.shape
+    c = min(chunk, S)
+    assert S % c == 0, "sequence must divide the xent chunk"
+    tp_idx = pc.ctx.tp_index()
+    lo = tp_idx * vocab_local
+
+    def body(carry, i):
+        nll_sum, n_valid = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, i * c, c, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        lg = (xs @ w).astype(jnp.float32)     # (B, c, V/tp)
+        m = jax.lax.stop_gradient(jnp.max(lg, axis=-1))
+        if pc.ctx.model_axis and pc.ctx.tp > 1:
+            m = jax.lax.pmax(m, pc.ctx.model_axis)
+        z = jnp.exp(lg - m[..., None])
+        denom = pc.ctx.psum_model(jnp.sum(z, axis=-1))
+        local = ls - lo
+        in_range = (local >= 0) & (local < vocab_local)
+        safe = jnp.clip(local, 0, vocab_local - 1)
+        picked = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+        picked = pc.ctx.psum_model(jnp.where(in_range, picked, 0.0))
+        nll = jnp.log(denom) + m - picked
+        valid = ls != ignore_id
+        return (nll_sum + jnp.sum(jnp.where(valid, nll, 0.0)),
+                n_valid + jnp.sum(valid)), ()
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (nll_sum, n_valid), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        jnp.arange(S // c))
+    return nll_sum / jnp.maximum(n_valid, 1)
+
+
+# ---------------------------------------------------------------------------
+# Generic dense projection (serving path may swap in the quant_matmul kernel)
+# ---------------------------------------------------------------------------
+
+
+def dense(pc: ParamCtx, path: str, w, x):
+    return x @ pc.use(path, w)

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts with expert parallelism over the model axis.
+
+Dispatch is **sort-based and shard-local** (no one-hot dispatch matmuls, no
+all-to-all): activations are replicated across the model axis between blocks
+(Megatron TP), so each model shard simply
+
+  1. routes its data-shard's tokens (router runs replicated, fp — exempt from
+     quantization, DESIGN.md §6),
+  2. keeps the (token, expert) assignments that hit its *local* experts,
+  3. groups them into an ``(e_local, capacity, d)`` buffer via scatter
+     (gathers/scatters are byte-moves, not FLOPs — the compiled cost stays
+     faithful to the MoE's 6·N_active·D model FLOPs),
+  4. runs the expert SwiGLU as one batched matmul (MXU-dense),
+  5. scatters partial outputs back and ``psum``s over the model axis —
+     the only collective in the block.
+
+Tokens beyond ``capacity = ceil(T*k/E * capacity_factor)`` are dropped
+(standard practice; the capacity factor is a config knob).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamCtx, init_dense
+from repro.models.layers import sp_out
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    k: int
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    tp: int
+    capacity_factor: float = 1.25
+    act: str = "swiglu"
+
+    @property
+    def e_local(self) -> int:
+        assert self.n_experts % self.tp == 0, "experts must divide tp"
+        return self.n_experts // self.tp
+
+    def capacity(self, n_tokens: int) -> int:
+        cap = int(n_tokens * self.k * self.capacity_factor / self.n_experts) + 1
+        return max(cap, 4)
+
+
+def init_moe(keys, dims: MoEDims, dtype=jnp.float32):
+    e, d, f = dims.e_local, dims.d_model, dims.d_ff
+    def stack(maker):
+        return jnp.stack([maker() for _ in range(e)])
+    p = {
+        "router": init_dense(next(keys), d, dims.n_experts, jnp.float32),
+        "w_up": stack(lambda: init_dense(next(keys), d, f, dtype)),
+        "w_down": stack(lambda: init_dense(next(keys), f, d, dtype)),
+    }
+    if dims.act in ("swiglu", "geglu"):
+        p["w_gate"] = stack(lambda: init_dense(next(keys), d, f, dtype))
+    return p
+
+
+def moe_block(pc: ParamCtx, path: str, p, x, dims: MoEDims):
+    """x: (B, S, D) local tokens (replicated over model axis).  Returns y."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+
+    # --- routing (replicated, fp32, not quantized) -----------------------
+    logits = xt.astype(jnp.float32) @ pc.use_small(f"{path}/router", p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, dims.k)                  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- local assignment grouping ---------------------------------------
+    tp_idx = pc.ctx.tp_index()
+    e_lo = tp_idx * dims.e_local
+    flat_e = ids.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]                                         # sorted expert ids
+    tok = order // dims.k                                      # source token
+    gw = gate.reshape(-1)[order]                               # gate weight
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(T * dims.k) - first                       # rank within expert
+    cap = dims.capacity(T)
+    local = se - e_lo
+    valid = (local >= 0) & (local < dims.e_local) & (pos < cap)
+    le = jnp.where(valid, local, 0)
+    lp = jnp.where(valid, pos, cap)                            # trash slot
+
+    # One-shot gather+scatter dispatch.  The (T*k, D) gather is transient and
+    # fuses into the scatter on the TPU backend; the CPU dry-run's
+    # memory_analysis().temp_size over-reports it (no TPU buffer scheduling)
+    # — see EXPERIMENTS.md §Dry-run notes.
+    buf = jnp.zeros((dims.e_local, cap + 1, D), x.dtype)
+    buf = buf.at[le, lp].set(jnp.where(valid[:, None], xt[tok], 0))
+    buf = buf[:, :cap]                                         # (e_loc, cap, D)
+
+    # --- expert FFN (batched matmul over local experts) -------------------
+    w_up = pc.use(f"{path}/w_up", p["w_up"])
+    w_down = pc.use(f"{path}/w_down", p["w_down"])
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    if dims.act in ("swiglu", "geglu"):
+        w_gate = pc.use(f"{path}/w_gate", p["w_gate"])
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        h = (jax.nn.silu(g) if dims.act == "swiglu"
+             else jax.nn.gelu(g, approximate=True)) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    out = jnp.einsum("ecf,efd->ecd", h, w_down)                # (e_loc, cap, D)
+
+    # --- un-dispatch + combine --------------------------------------------
+    out = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))               # trash row back
+    ys = out[le, lp] * jnp.where(valid, gw, 0.0)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok].add(ys)
+    y = sp_out(pc, y.reshape(B, S, D))
+    return y, {"router_probs_mean": jnp.mean(probs, axis=0)}

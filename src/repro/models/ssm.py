@@ -1,0 +1,241 @@
+"""Mamba2 (SSD — state-space duality) mixer, TP-sharded over heads.
+
+The SSD computation follows Dao & Gu 2024: the selective SSM
+``s_t = exp(dt_t A) s_{t-1} + dt_t B_t x_t``, ``y_t = C_t s_t + D x_t``
+is evaluated in chunks: a quadratic attention-like *intra-chunk* term plus a
+linear *inter-chunk* recurrence over chunk summary states — O(S·Q) work and
+O(S) memory for chunk size Q, sub-quadratic end to end (this is why the SSM
+archs run the 500k-context cell).
+
+TP: heads are sharded over the model axis (x/z/dt projections column-parallel,
+out-projection row-parallel + psum).  B/C projections use a single group
+(mamba2 default) and stay replicated.  Recurrence-critical params
+(``a_log``, ``dt_bias``, ``d_skip``) are exempt from quantization
+(DESIGN.md §6) — mirroring the paper's own high-precision exemptions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamCtx, init_dense
+from repro.models.layers import sp_out
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int
+    head_dim: int
+    expand: int
+    conv_width: int
+    chunk: int
+    tp: int
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def heads_local(self) -> int:
+        assert self.n_heads % self.tp == 0
+        return self.n_heads // self.tp
+
+    @property
+    def d_inner_local(self) -> int:
+        return self.heads_local * self.head_dim
+
+
+def init_ssm(keys, dims: SSMDims, dtype=jnp.float32):
+    d, dl, hl, n = dims.d_model, dims.d_inner_local, dims.heads_local, dims.d_state
+    return {
+        "wx": init_dense(next(keys), d, dl, dtype),
+        "wz": init_dense(next(keys), d, dl, dtype),
+        "w_bc": init_dense(next(keys), d, 2 * n, dtype),
+        "w_dt": init_dense(next(keys), d, hl, dtype),
+        "conv_x": (jax.random.normal(next(keys), (dims.conv_width, dl)) * 0.1).astype(dtype),
+        "conv_bc": (jax.random.normal(next(keys), (dims.conv_width, 2 * n)) * 0.1).astype(dtype),
+        "a_log": jnp.zeros((hl,), jnp.float32),       # A = -exp(a_log): init -1
+        "dt_bias": jnp.full((hl,), -2.0, jnp.float32),  # softplus ~= 0.12
+        "d_skip": jnp.ones((hl,), jnp.float32),
+        "wo": init_dense(next(keys), dl, d, dtype),
+        "norm": jnp.zeros((dl,), jnp.float32),
+    }
+
+
+def _causal_depthwise_conv(x, kernel):
+    """x: (B, S, C); kernel: (W, C).  Causal depthwise conv, no FLOP bloat."""
+    W = kernel.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for w in range(W):
+        out = out + pad[:, w : w + S, :] * kernel[w][None, None, :]
+    return out
+
+
+def _ssd_scan(xdt, la, Bm, Cm, chunk: int):
+    """Chunked SSD.
+
+    xdt: (B,S,H,P) inputs pre-scaled by dt; la: (B,S,H) log-decay (dt*A, <=0);
+    Bm/Cm: (B,S,N).  Returns y: (B,S,H,P) and final state (B,H,N,P).
+    """
+    Bsz, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, "sequence must divide the SSD chunk"
+    C = S // Q
+    xdt = xdt.reshape(Bsz, C, Q, H, P)
+    la = la.reshape(Bsz, C, Q, H)
+    Bm = Bm.reshape(Bsz, C, Q, N)
+    Cm = Cm.reshape(Bsz, C, Q, N)
+
+    L = jnp.cumsum(la, axis=2)                       # within-chunk cum log decay
+    Ltot = L[:, :, -1:, :]                           # (B,C,1,H)
+
+    # intra-chunk (quadratic in Q only).  Looped over heads with lax.map so
+    # the (B,C,Q,Q) score block is materialized for ONE head at a time —
+    # without this the decay tensor is (B,C,Q,Q,H): gigabytes per layer for
+    # the jamba-scale mixers.
+    dotCB = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)    # shared across heads
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None]
+
+    def one_head(args):
+        Lh, xh_ = args                               # (B,C,Q), (B,C,Q,P)
+        decay = jnp.exp(Lh[:, :, :, None] - Lh[:, :, None, :])
+        att = dotCB * jnp.where(causal, decay, 0.0)
+        return jnp.einsum("bcij,bcjp->bcip", att, xh_)
+
+    Lh_all = jnp.moveaxis(L, -1, 0)                  # (H,B,C,Q)
+    xdt_h = jnp.moveaxis(xdt, -2, 0)                 # (H,B,C,Q,P)
+    y_intra = jnp.moveaxis(jax.lax.map(one_head, (Lh_all, xdt_h)), 0, -2)
+
+    # chunk summary states: S_c = sum_j exp(Ltot - L_j) B_j (x dt)_j
+    w_end = jnp.exp(Ltot - L)                        # (B,C,Q,H)
+    Sc = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bm, w_end, xdt)
+
+    # inter-chunk recurrence over chunk states
+    dc = jnp.exp(Ltot[:, :, 0, :])                   # (B,C,H) total chunk decay
+
+    def step(R, inp):
+        d, s = inp                                   # (B,H), (B,H,N,P)
+        R_new = R * d[..., None, None] + s
+        return R_new, R                              # emit state BEFORE chunk
+
+    R0 = jnp.zeros((Bsz, H, N, P), xdt.dtype)
+    Rlast, Rprev = jax.lax.scan(
+        step,
+        R0,
+        (jnp.moveaxis(dc, 1, 0), jnp.moveaxis(Sc, 1, 0)),
+    )
+    Rprev = jnp.moveaxis(Rprev, 0, 1)                # (B,C,H,N,P)
+
+    w_start = jnp.exp(L)                             # decay from chunk start
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cm, w_start, Rprev)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, Rlast
+
+
+def _gated_norm(pc: ParamCtx, path, scale, y, z, eps=1e-6):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + eps)
+    return (yn * (1.0 + pc.use_small(path, scale))).astype(y.dtype)
+
+
+def ssm_block(pc: ParamCtx, path: str, p, x, dims: SSMDims):
+    """Training/prefill mixer.  x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    hl, P, N = dims.heads_local, dims.head_dim, dims.d_state
+
+    xr = x @ pc.use(f"{path}/wx", p["wx"])           # (B,S,dl)
+    z = x @ pc.use(f"{path}/wz", p["wz"])
+    bc = x @ pc.use(f"{path}/w_bc", p["w_bc"])       # replicated
+    dt = x @ pc.use(f"{path}/w_dt", p["w_dt"])       # (B,S,hl)
+
+    xr = jax.nn.silu(_causal_depthwise_conv(xr, pc.use_small(f"{path}/conv_x", p["conv_x"])))
+    bc = jax.nn.silu(_causal_depthwise_conv(bc, pc.use_small(f"{path}/conv_bc", p["conv_bc"])))
+    Bm, Cm = bc[..., :N], bc[..., N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + pc.use_small(f"{path}/dt_bias", p["dt_bias"]).astype(jnp.float32))
+    A = -jnp.exp(pc.use_small(f"{path}/a_log", p["a_log"]).astype(jnp.float32))
+    la = dt * A[None, None, :]                       # (B,S,hl), <= 0
+
+    xh = xr.reshape(B, S, hl, P)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    y, _ = _ssd_scan(xdt, la.astype(xh.dtype), Bm, Cm, dims.chunk)
+    y = y + xh * pc.use_small(f"{path}/d_skip", p["d_skip"]).astype(xh.dtype)[None, None, :, None]
+
+    y = y.reshape(B, S, dims.d_inner_local)
+    y = _gated_norm(pc, f"{path}/norm", p["norm"], y, z)
+    out = y @ pc.use(f"{path}/wo", p["wo"])
+    return sp_out(pc, out)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) per token — constant state, no KV cache growth.
+# ---------------------------------------------------------------------------
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray        # (B, H_local, N, P)
+    conv_x: jnp.ndarray       # (B, W-1, d_inner_local)
+    conv_bc: jnp.ndarray      # (B, W-1, 2N)
+
+
+def init_ssm_cache(batch: int, dims: SSMDims, dtype=jnp.bfloat16):
+    return SSMCache(
+        state=jnp.zeros((batch, dims.heads_local, dims.d_state, dims.head_dim), dtype),
+        conv_x=jnp.zeros((batch, dims.conv_width - 1, dims.d_inner_local), dtype),
+        conv_bc=jnp.zeros((batch, dims.conv_width - 1, 2 * dims.d_state), dtype),
+    )
+
+
+def ssm_decode_step(pc: ParamCtx, path: str, p, x, cache: SSMCache, dims: SSMDims):
+    """x: (B, 1, D) -> (y, new_cache)."""
+    B = x.shape[0]
+    hl, P, N = dims.heads_local, dims.head_dim, dims.d_state
+
+    xr = x @ pc.use(f"{path}/wx", p["wx"])
+    z = x @ pc.use(f"{path}/wz", p["wz"])
+    bc = x @ pc.use(f"{path}/w_bc", p["w_bc"])
+    dt = x @ pc.use(f"{path}/w_dt", p["w_dt"])
+
+    # rolling conv caches
+    cx = jnp.concatenate([cache.conv_x, xr.astype(cache.conv_x.dtype)], axis=1)
+    cb = jnp.concatenate([cache.conv_bc, bc.astype(cache.conv_bc.dtype)], axis=1)
+    kx = pc.use_small(f"{path}/conv_x", p["conv_x"])
+    kb = pc.use_small(f"{path}/conv_bc", p["conv_bc"])
+    xr1 = jax.nn.silu(jnp.einsum("bwc,wc->bc", cx.astype(kx.dtype), kx))[:, None, :]
+    bc1 = jax.nn.silu(jnp.einsum("bwc,wc->bc", cb.astype(kb.dtype), kb))[:, None, :]
+    Bm, Cm = bc1[..., :N], bc1[..., N:]
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + pc.use_small(f"{path}/dt_bias", p["dt_bias"]).astype(jnp.float32))[:, 0]
+    A = -jnp.exp(pc.use_small(f"{path}/a_log", p["a_log"]).astype(jnp.float32))
+    decay = jnp.exp(dtv * A[None, :])                # (B, hl)
+
+    xh = xr1.reshape(B, hl, P)
+    upd = jnp.einsum("bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                     (xh * dtv[..., None].astype(xh.dtype)).astype(jnp.float32))
+    state = cache.state.astype(jnp.float32) * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), state).astype(x.dtype)
+    y = y + xh * pc.use_small(f"{path}/d_skip", p["d_skip"]).astype(xh.dtype)[None, :, None]
+
+    y = y.reshape(B, 1, dims.d_inner_local)
+    y = _gated_norm(pc, f"{path}/norm", p["norm"], y, z)
+    out = pc.ctx.psum_model(y @ pc.use(f"{path}/wo", p["wo"]))
+    new = SSMCache(state=state.astype(cache.state.dtype),
+                   conv_x=cx[:, 1:], conv_bc=cb[:, 1:])
+    return out, new

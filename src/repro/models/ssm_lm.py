@@ -1,0 +1,87 @@
+"""Pure-SSM language model (mamba2 class): norm -> SSD mixer -> residual.
+
+No attention, no per-token KV growth: decode state is O(1) in context length,
+which is why this family runs the 500k-context cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import ParamCtx, init_dense, key_iter
+from repro.models.hybrid import ssm_dims
+from repro.models.ssm import SSMCache, init_ssm, init_ssm_cache, ssm_block, ssm_decode_step
+from repro.models.transformer import padded_vocab_local, _stack
+
+
+def init_ssm_lm(cfg: ModelConfig, key, tp: int, dtype=jnp.float32) -> dict:
+    ks = key_iter(key)
+    sd = ssm_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+
+    def one_block(_):
+        return {"ln": L.init_rmsnorm(cfg.d_model), "ssm": init_ssm(ks, sd, dtype)}
+
+    return {
+        "embed": {"table": L.init_vocab_embed(next(ks), vl, cfg.d_model, dtype)},
+        "blocks": _stack([one_block(i) for i in range(cfg.n_layers)]),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "unembed": {"w": init_dense(next(ks), cfg.d_model, vl, dtype)},
+    }
+
+
+def forward(cfg: ModelConfig, pc: ParamCtx, params, tokens, *, attn_impl="auto", return_hidden=False):
+    tp = pc.ctx.tp
+    sd = ssm_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], tokens, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def block(x, lp):
+        h = L.sp_gather(pc, L.rmsnorm(pc, "blocks/ln", lp["ln"], x, cfg.norm_eps))
+        return x + ssm_block(pc, "blocks/ssm", lp["ssm"], h, sd), ()
+
+    if cfg.remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, params["blocks"])
+    x = L.sp_gather(pc, L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps))
+    if return_hidden:
+        return x
+    return L.vocab_logits(pc, "unembed", params["unembed"]["w"], x)
+
+
+def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto"):
+    x = forward(cfg, pc, params, batch["tokens"], attn_impl=attn_impl,
+                return_hidden=True)
+    vl = padded_vocab_local(cfg, pc.ctx.tp)
+    loss = L.fused_vocab_xent(pc, "unembed/w", params["unembed"]["w"], x,
+                              batch["labels"], vl)
+    return loss, {}
+
+
+def init_ssm_lm_caches(cfg: ModelConfig, batch: int, tp: int, dtype=jnp.bfloat16):
+    sd = ssm_dims(cfg, tp)
+    one = init_ssm_cache(batch, sd, dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+
+
+def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
+    tp = pc.ctx.tp
+    sd = ssm_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def block(x, scanned):
+        lp, cache = scanned
+        h = L.rmsnorm(pc, "blocks/ln", lp["ln"], x, cfg.norm_eps)
+        a, nc = ssm_decode_step(pc, "blocks/ssm", lp["ssm"], h, cache, sd)
+        return x + a, nc
+
+    x, new_caches = jax.lax.scan(block, x, (params["blocks"], caches))
+    x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
+    return L.vocab_logits(pc, "unembed", params["unembed"]["w"], x), new_caches

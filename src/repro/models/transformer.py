@@ -1,0 +1,167 @@
+"""Decoder-only transformer LM (dense and MoE families).
+
+Assembly notes
+--------------
+* Layers are **stacked** and traversed with ``lax.scan`` (+ optional remat):
+  compile time and HLO size stay O(1) in depth — essential for the 94-100
+  layer archs in the dry-run.
+* Vocabulary is padded to a multiple of tp; padding rows are ordinary
+  never-predicted logits (standard Megatron practice).
+* All parameter access goes through ``ParamCtx.use`` — FSDP gather + FWQ
+  per-client quantization + dtype cast in one place.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import (
+    AttnDims,
+    KVCache,
+    decode_self_attention,
+    init_attention,
+    init_kv_cache,
+    self_attention,
+)
+from repro.models.common import ParamCtx, init_dense, key_iter
+from repro.models.moe import MoEDims, init_moe, moe_block
+
+
+def padded_vocab_local(cfg: ModelConfig, tp: int) -> int:
+    return -(-cfg.vocab_size // tp)  # ceil
+
+
+def attn_dims(cfg: ModelConfig, tp: int, causal: bool = True) -> AttnDims:
+    return AttnDims(
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+        d_model=cfg.d_model, tp=tp, causal=causal, rope_theta=cfg.rope_theta,
+    )
+
+
+def moe_dims(cfg: ModelConfig, tp: int) -> MoEDims:
+    return MoEDims(
+        n_experts=cfg.n_experts, k=cfg.experts_per_token, d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff or cfg.d_ff, tp=tp,
+        capacity_factor=cfg.capacity_factor, act=cfg.mlp_act,
+    )
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(cfg: ModelConfig, key, tp: int, dtype=jnp.float32) -> dict:
+    ks = key_iter(key)
+    ad = attn_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    is_moe = cfg.family == "moe"
+    md = moe_dims(cfg, tp) if is_moe else None
+
+    def one_block(_):
+        p = {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": init_attention(ks, ad, dtype),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+        }
+        if is_moe:
+            p["moe"] = init_moe(ks, md, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks, cfg.d_model, cfg.d_ff // tp, cfg.mlp_act, dtype)
+        return p
+
+    return {
+        "embed": {"table": L.init_vocab_embed(next(ks), vl, cfg.d_model, dtype)},
+        "blocks": _stack([one_block(i) for i in range(cfg.n_layers)]),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "unembed": {"w": init_dense(next(ks), cfg.d_model, vl, dtype)},
+    }
+
+
+def _block_fn(cfg: ModelConfig, pc: ParamCtx, tp: int, attn_impl: str):
+    ad = attn_dims(cfg, tp)
+    md = moe_dims(cfg, tp) if cfg.family == "moe" else None
+
+    def block(x, lp):
+        h = L.sp_gather(pc, L.rmsnorm(pc, "blocks/ln1", lp["ln1"], x, cfg.norm_eps))
+        a, _ = self_attention(pc, "blocks/attn", lp["attn"], h, ad, impl=attn_impl)
+        x = x + a
+        h = L.sp_gather(pc, L.rmsnorm(pc, "blocks/ln2", lp["ln2"], x, cfg.norm_eps))
+        if cfg.family == "moe":
+            m, _aux = moe_block(pc, "blocks/moe", lp["moe"], h, md)
+        else:
+            m = L.mlp(pc, "blocks/mlp", lp["mlp"], h, cfg.mlp_act)
+        return x + m, ()
+
+    return block
+
+
+def forward(cfg: ModelConfig, pc: ParamCtx, params, tokens, *, attn_impl="auto", return_hidden=False):
+    """tokens: (B, S) -> local logits (B, S, V/tp)."""
+    tp = pc.ctx.tp
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], tokens, vl)
+    x = x.astype(pc.compute_dtype)
+    block = _block_fn(cfg, pc, tp, attn_impl)
+    if cfg.remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, params["blocks"])
+    x = L.sp_gather(pc, L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps))
+    if return_hidden:
+        return x
+    return L.vocab_logits(pc, "unembed", params["unembed"]["w"], x)
+
+
+def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto"):
+    x = forward(cfg, pc, params, batch["tokens"], attn_impl=attn_impl,
+                return_hidden=True)
+    vl = padded_vocab_local(cfg, pc.ctx.tp)
+    loss = L.fused_vocab_xent(pc, "unembed/w", params["unembed"]["w"], x,
+                              batch["labels"], vl)
+    return loss, {}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int, dtype=jnp.bfloat16):
+    ad = attn_dims(cfg, tp)
+    one = init_kv_cache(batch, s_max, ad, dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+
+
+def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches,
+                *, attn_impl="auto"):
+    """token: (B, 1) int32 -> (local_logits (B,1,V/tp), new caches)."""
+    tp = pc.ctx.tp
+    ad = attn_dims(cfg, tp)
+    md = moe_dims(cfg, tp) if cfg.family == "moe" else None
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def block(x, scanned):
+        lp, cache = scanned
+        h = L.rmsnorm(pc, "blocks/ln1", lp["ln1"], x, cfg.norm_eps)
+        a, new_cache = decode_self_attention(pc, "blocks/attn", lp["attn"], h,
+                                             cache, ad)
+        x = x + a
+        h = L.rmsnorm(pc, "blocks/ln2", lp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe_block(pc, "blocks/moe", lp["moe"], h, md)
+        else:
+            m = L.mlp(pc, "blocks/mlp", lp["mlp"], h, cfg.mlp_act)
+        return x + m, new_cache
+
+    x, new_caches = jax.lax.scan(block, x, (params["blocks"], caches))
+    x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
+    logits = L.vocab_logits(pc, "unembed", params["unembed"]["w"], x)
+    return logits, new_caches

@@ -1,0 +1,179 @@
+"""Vision-language backbone (llama-3.2-vision class).
+
+100 layers = 20 periods of [1 cross-attention layer + 4 self-attention
+layers].  The vision frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings ``(B, n_image_tokens, d_frontend)``; a
+linear adapter projects them to the backbone width and they serve as the
+cross-attention memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import (
+    KVCache, cross_attention, cross_attention_cached, decode_self_attention,
+    init_attention, init_kv_cache, project_cross_kv, self_attention,
+)
+from repro.models.common import ParamCtx, init_dense, key_iter
+from repro.models.transformer import attn_dims, padded_vocab_local, _stack
+
+
+def init_vlm(cfg: ModelConfig, key, tp: int, dtype=jnp.float32) -> dict:
+    period = cfg.cross_attn_period
+    assert cfg.n_layers % period == 0
+    n_periods = cfg.n_layers // period
+    ks = key_iter(key)
+    ad = attn_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    d_front = cfg.d_frontend or cfg.d_model
+
+    def one_period(_):
+        p = {"cross": {
+            "ln": L.init_rmsnorm(cfg.d_model),
+            "attn": init_attention(ks, ad, dtype),
+            "gate": jnp.zeros((), jnp.float32),   # zero-init cross gate (llama3.2)
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(ks, cfg.d_model, cfg.d_ff // tp, cfg.mlp_act, dtype),
+            "mlp_gate": jnp.zeros((), jnp.float32),
+        }}
+        for j in range(period - 1):
+            p[f"self{j}"] = {
+                "ln1": L.init_rmsnorm(cfg.d_model),
+                "attn": init_attention(ks, ad, dtype),
+                "ln2": L.init_rmsnorm(cfg.d_model),
+                "mlp": L.init_mlp(ks, cfg.d_model, cfg.d_ff // tp, cfg.mlp_act, dtype),
+            }
+        return p
+
+    return {
+        "adapter": init_dense(next(ks), d_front, cfg.d_model, dtype),
+        "embed": {"table": L.init_vocab_embed(next(ks), vl, cfg.d_model, dtype)},
+        "periods": _stack([one_period(i) for i in range(n_periods)]),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "unembed": {"w": init_dense(next(ks), cfg.d_model, vl, dtype)},
+    }
+
+
+def _period_fn(cfg: ModelConfig, pc: ParamCtx, tp: int, memory, attn_impl: str):
+    ad = attn_dims(cfg, tp)
+
+    def period(x, pp):
+        cp = pp["cross"]
+        h = L.sp_gather(pc, L.rmsnorm(pc, "cross/ln", cp["ln"], x, cfg.norm_eps))
+        a = cross_attention(pc, "cross/attn", cp["attn"], h, memory, ad)
+        x = x + jnp.tanh(cp["gate"]).astype(x.dtype) * a
+        h = L.sp_gather(pc, L.rmsnorm(pc, "cross/ln2", cp["ln2"], x, cfg.norm_eps))
+        m = L.mlp(pc, "cross/mlp", cp["mlp"], h, cfg.mlp_act)
+        x = x + jnp.tanh(cp["mlp_gate"]).astype(x.dtype) * m
+        for j in range(cfg.cross_attn_period - 1):
+            sp = pp[f"self{j}"]
+            h = L.sp_gather(pc, L.rmsnorm(pc, f"self{j}/ln1", sp["ln1"], x, cfg.norm_eps))
+            a, _ = self_attention(pc, f"self{j}/attn", sp["attn"], h, ad,
+                                  impl=attn_impl)
+            x = x + a
+            h = L.sp_gather(pc, L.rmsnorm(pc, f"self{j}/ln2", sp["ln2"], x, cfg.norm_eps))
+            x = x + L.mlp(pc, f"self{j}/mlp", sp["mlp"], h, cfg.mlp_act)
+        return x, ()
+
+    return period
+
+
+def forward(cfg: ModelConfig, pc: ParamCtx, params, tokens, images,
+            *, attn_impl="auto", return_hidden=False):
+    """tokens: (B,S); images: (B, n_img, d_frontend) stub patch embeddings."""
+    tp = pc.ctx.tp
+    vl = padded_vocab_local(cfg, tp)
+    memory = images.astype(pc.compute_dtype) @ pc.use("adapter", params["adapter"])
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], tokens, vl)
+    x = x.astype(pc.compute_dtype)
+    period = _period_fn(cfg, pc, tp, memory, attn_impl)
+    if cfg.remat:
+        period = jax.checkpoint(period, prevent_cse=False)
+    x, _ = jax.lax.scan(period, x, params["periods"])
+    x = L.sp_gather(pc, L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps))
+    if return_hidden:
+        return x
+    return L.vocab_logits(pc, "unembed", params["unembed"]["w"], x)
+
+
+def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto"):
+    x = forward(cfg, pc, params, batch["tokens"], batch["images"],
+                attn_impl=attn_impl, return_hidden=True)
+    vl = padded_vocab_local(cfg, pc.ctx.tp)
+    loss = L.fused_vocab_xent(pc, "unembed/w", params["unembed"]["w"], x,
+                              batch["labels"], vl)
+    return loss, {}
+
+
+def init_vlm_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
+                    dtype=jnp.bfloat16):
+    period = cfg.cross_attn_period
+    n_periods = cfg.n_layers // period
+    ad = attn_dims(cfg, tp)
+    caches = {}
+    for j in range(period - 1):
+        one = init_kv_cache(batch, s_max, ad, dtype)
+        caches[f"self{j}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), one)
+    # precomputed cross-attention K/V over the image memory (filled by
+    # fill_cross_caches at prefill; zeros here are shape stand-ins)
+    n_img = cfg.n_image_tokens or 1601
+    kv_shape = (n_periods, batch, n_img, ad.kv_local, ad.head_dim)
+    caches["cross_k"] = jnp.zeros(kv_shape, dtype)
+    caches["cross_v"] = jnp.zeros(kv_shape, dtype)
+    return caches
+
+
+def fill_cross_caches(cfg: ModelConfig, pc, params, images, caches):
+    # Prefill step for the cross-attention memory: project once, cache.
+    ad = attn_dims(cfg, pc.ctx.tp)
+    memory = images.astype(pc.compute_dtype) @ pc.use("adapter", params["adapter"])
+
+    def body(_, pp):
+        k, v = project_cross_kv(pc, "cross/attn", pp["cross"]["attn"], memory, ad)
+        return (), (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, (), params["periods"])
+    return {**caches, "cross_k": ks.astype(caches["cross_k"].dtype),
+            "cross_v": vs.astype(caches["cross_v"].dtype)}
+
+
+def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
+    # One token; cross-attention uses the precomputed K/V caches.
+    tp = pc.ctx.tp
+    ad = attn_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def period(x, scanned):
+        pp, pcache = scanned
+        cp = pp["cross"]
+        h = L.rmsnorm(pc, "cross/ln", cp["ln"], x, cfg.norm_eps)
+        a = cross_attention_cached(pc, "cross/attn", cp["attn"], h,
+                                   pcache["cross_k"], pcache["cross_v"], ad)
+        x = x + jnp.tanh(cp["gate"]).astype(x.dtype) * a
+        h = L.rmsnorm(pc, "cross/ln2", cp["ln2"], x, cfg.norm_eps)
+        m = L.mlp(pc, "cross/mlp", cp["mlp"], h, cfg.mlp_act)
+        x = x + jnp.tanh(cp["mlp_gate"]).astype(x.dtype) * m
+        new_caches = {}
+        for j in range(cfg.cross_attn_period - 1):
+            sp = pp[f"self{j}"]
+            h = L.rmsnorm(pc, f"self{j}/ln1", sp["ln1"], x, cfg.norm_eps)
+            a, nc = decode_self_attention(pc, f"self{j}/attn", sp["attn"], h,
+                                          pcache[f"self{j}"], ad)
+            new_caches[f"self{j}"] = nc
+            x = x + a
+            h = L.rmsnorm(pc, f"self{j}/ln2", sp["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp(pc, f"self{j}/mlp", sp["mlp"], h, cfg.mlp_act)
+        new_caches["cross_k"] = pcache["cross_k"]   # pass-through (static)
+        new_caches["cross_v"] = pcache["cross_v"]
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(period, x, (params["periods"], caches))
+    x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
+    return L.vocab_logits(pc, "unembed", params["unembed"]["w"], x), new_caches

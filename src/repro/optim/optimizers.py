@@ -1,0 +1,83 @@
+"""Optimizers in pure JAX (no external deps).
+
+The paper's server update is plain SGD in full precision (Algorithm 1
+line 11); momentum/AdamW are provided for the beyond-paper experiments.
+API mirrors optax: ``init(params) -> state``;
+``update(grads, state, params) -> (updates, state)`` where ``updates`` are
+*added* to params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = _tmap(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr_t = lr_fn(step)
+        g = _tmap(lambda gg: gg.astype(jnp.float32), grads)
+        if weight_decay:
+            g = _tmap(lambda gg, p: gg + weight_decay * p.astype(jnp.float32), g, params)
+        if momentum:
+            mu = _tmap(lambda m, gg: momentum * m + gg, state["mu"], g)
+            upd = _tmap(lambda m: -lr_t * m, mu)
+            return upd, {"step": step + 1, "mu": mu}
+        return _tmap(lambda gg: -lr_t * gg, g), {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(zeros, params), "v": _tmap(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        g = _tmap(lambda gg: gg.astype(jnp.float32), grads)
+        m = _tmap(lambda mm, gg: b1 * mm + (1 - b1) * gg, state["m"], g)
+        v = _tmap(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, state["v"], g)
+        mh = _tmap(lambda mm: mm / (1 - b1 ** step.astype(jnp.float32)), m)
+        vh = _tmap(lambda vv: vv / (1 - b2 ** step.astype(jnp.float32)), v)
+        upd = _tmap(lambda mm, vv, p: -lr_t * (mm / (jnp.sqrt(vv) + eps)
+                                               + weight_decay * p.astype(jnp.float32)),
+                    mh, vh, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def build_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name}")

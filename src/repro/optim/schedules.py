@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr * (final_frac + (1 - final_frac) * cos))
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    decay = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, jnp.float32(lr) * w, decay(step - warmup))
+    return f

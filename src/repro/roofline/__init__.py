@@ -1,0 +1,2 @@
+from repro.roofline.analysis import RooflineReport, analyze_compiled  # noqa: F401
+from repro.roofline.hw import TPU_V5E  # noqa: F401

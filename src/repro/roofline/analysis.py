@@ -1,0 +1,180 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+Sources (deliverable g):
+* ``compiled.cost_analysis()``  -> HLO FLOPs + HBM bytes (per device: the
+  module is the SPMD-partitioned per-device program).
+* ``compiled.as_text()``        -> collective bytes: sum of operand sizes of
+  every all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute instruction (shapes parsed from the HLO text).
+
+Terms (seconds, per training/serving step, per device):
+    compute    = flops / peak
+    memory     = bytes_accessed / hbm_bw
+    collective = collective_bytes / ici_link_bw
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from repro.roofline.hw import ChipSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[su]\d+|bf16|f16|f32|f64|c64|c128)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind operand bytes, from the partitioned HLO text.
+
+    A line looks like::
+
+        %all-gather.7 = bf16[4096,512]{1,0} all-gather(bf16[256,512]{1,0} %p),
+            replica_groups=..., dimensions={0}
+
+    We sum the *operand* shapes (inside the parens).  ``*-start`` ops are
+    counted; their ``*-done`` halves carry no shapes and are skipped.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s+[^=]*?\b(" + "|".join(_COLLECTIVES) + r")(-start)?\(",
+                      stripped)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand section: everything inside the outermost call parens
+        call = stripped[m.end() - 1:]
+        depth, end = 0, len(call)
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = call[:end]
+        b = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(operands))
+        if b == 0.0:
+            # operands printed without inline types: fall back to result shape
+            head = stripped[: m.start()]
+            b = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+        out[kind] += b
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float          # loop-aware structural count (hlo_parse)
+    bytes_per_device: float          # dot-stream bytes, bf16-equivalent
+    bytes_per_device_raw: float      # as compiled (CPU backend upcasts bf16)
+    collective_bytes: float          # wire-model bytes, bf16-equivalent
+    collective_bytes_raw: float
+    collective_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    useful_flops_ratio: float        # MODEL_FLOPS / (HLO_FLOPs * devices)
+    memory_stats: dict
+    cost_analysis_flops: float       # XLA's (loop bodies counted once)
+    note: str = ""
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    def summary_row(self):
+        return (f"{self.arch},{self.shape},{self.mesh},{self.compute_s:.3e},"
+                f"{self.memory_s:.3e},{self.collective_s:.3e},{self.dominant},"
+                f"{self.useful_flops_ratio:.3f}")
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     n_devices: int, model_flops_global: float,
+                     chip: ChipSpec = TPU_V5E, note: str = "") -> RooflineReport:
+    from repro.roofline.hlo_parse import parse_module
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    txt = compiled.as_text()
+    mc = parse_module(txt)
+    # The CPU backend upcasts bf16 compute to f32; on the v5e target the hot
+    # tensors are bf16.  Report the bf16-equivalent byte terms (f32 bytes
+    # halved) alongside the raw compiled ones; FLOP counts are unaffected.
+    mc_bf16 = parse_module(txt.replace("f32[", "bf16["))
+
+    try:
+        ma = compiled.memory_analysis()
+        mem_stats = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_estimate": int(ma.argument_size_in_bytes
+                                 + ma.output_size_in_bytes
+                                 + ma.temp_size_in_bytes
+                                 - ma.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_stats = {"error": str(e)}
+
+    flops = mc.flops
+    compute_s = flops / chip.peak_flops_bf16
+    memory_s = mc_bf16.dot_bytes / chip.hbm_bw
+    collective_s = mc_bf16.collective_bytes / chip.ici_link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_global / max(flops * n_devices, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=flops,
+        bytes_per_device=mc_bf16.dot_bytes, bytes_per_device_raw=mc.dot_bytes,
+        collective_bytes=mc_bf16.collective_bytes,
+        collective_bytes_raw=mc.collective_bytes,
+        collective_breakdown={"bytes": mc_bf16.collective_by_kind,
+                              "counts": mc.collective_counts},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops_global=model_flops_global,
+        useful_flops_ratio=useful, memory_stats=mem_stats,
+        cost_analysis_flops=float(cost.get("flops", 0.0)), note=note,
+    )
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (N = active params).
+
+    D counts processed tokens: train/prefill -> batch*seq; decode -> batch*1.
+    """
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * seq_len * global_batch
+    if shape_kind == "prefill":
+        return 2.0 * n * seq_len * global_batch
+    return 2.0 * n * global_batch  # decode: one token per sequence

@@ -1,0 +1,228 @@
+"""Structural HLO parser: loop-aware FLOP / byte / collective accounting.
+
+``compiled.cost_analysis()`` counts ``while`` bodies ONCE — for scan-over-
+layers models that understates FLOPs by ~n_layers.  This parser walks the
+partitioned HLO text instead:
+
+* splits the module into computations,
+* builds a global name -> shape table (instruction results + computation
+  parameters),
+* accounts per computation: dot FLOPs/bytes and collective wire bytes,
+* propagates multipliers along the call graph — ``while`` bodies multiply by
+  the ``known_trip_count`` XLA records in ``backend_config``, fusions/calls
+  by 1 — starting at ENTRY.
+
+Conventions:
+* dot FLOPs  = 2 * prod(result dims) * prod(contracted lhs dims)
+* dot bytes  = lhs + rhs + result bytes (the MXU stream; elementwise ops ride
+  along inside fusions and are excluded — documented under §Roofline)
+* collective wire bytes per device (ring model, group size n):
+    all-gather:        (n-1)/n * result
+    reduce-scatter:    (n-1)/n * input  (= (n-1) * result)
+    all-reduce:        2(n-1)/n * result
+    all-to-all:        (n-1)/n * result
+    collective-permute: result
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[su](?:4|8|16|32|64)|bf16|f16|f32|f64|c64|c128)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\((.*)\)\s*->")
+_OPCODE_RE = re.compile(
+    r"\b(dot|while|fusion|call|conditional|all-gather|all-reduce|reduce-scatter"
+    r"|all-to-all|collective-permute)(?:-start)?\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=(%[\w\.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=(%[\w\.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=(%[\w\.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUP_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+
+def _shape_bytes(dtype, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype], n
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    dot_bytes: float
+    collective_bytes: float           # wire-model bytes, per device
+    collective_by_kind: dict
+    collective_counts: dict
+    n_while: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def parse_module(text: str) -> ModuleCosts:
+    # ---- pass 1: split computations, collect result/param shapes ----------
+    comps: dict[str, list[str]] = {}
+    shapes: dict[str, tuple[str, str]] = {}
+    current = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line)
+        if mc and line.endswith("{"):
+            current = mc.group(1)
+            comps[current] = []
+            # parameter shapes: "name: f32[4,8], other: (f32[], s32[2])"
+            for pname, ptype in re.findall(r"([\w\.\-]+)\s*:\s*([^,()]*(?:\([^)]*\))?[^,]*)",
+                                           mc.group(2)):
+                ms = _SHAPE_RE.search(ptype)
+                if ms:
+                    shapes["%" + pname] = (ms.group(1), ms.group(2))
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        comps[current].append(line)
+        md = _DEF_RE.match(line)
+        if md:
+            ms = _SHAPE_RE.search(md.group(2))
+            if ms:
+                shapes[md.group(1)] = (ms.group(1), ms.group(2))
+
+    # ---- pass 2: per-computation costs + call edges ------------------------
+    comp_cost = {}
+    for name, lines in comps.items():
+        flops = 0.0
+        dbytes = 0.0
+        coll = defaultdict(float)
+        counts = defaultdict(int)
+        edges = []
+        n_while = 0
+        for line in lines:
+            mo = _OPCODE_RE.search(line)
+            if not mo:
+                continue
+            op = mo.group(1)
+            md = _DEF_RE.match(line)
+            res = _SHAPE_RE.findall(md.group(2)) if md else []
+            if op == "dot":
+                out_b, _ = _shape_bytes(*res[0])
+                # operands: first two %refs inside the call parens
+                tail = line[mo.end():]
+                refs = re.findall(r"(%[\w\.\-]+)", tail.split(")")[0])
+                lhs = shapes.get(refs[0]) if refs else None
+                rhs = shapes.get(refs[1]) if len(refs) > 1 else None
+                cd = _LHS_CDIMS_RE.search(line)
+                k = 1
+                if lhs and cd:
+                    dims = [int(x) for x in lhs[1].split(",") if x]
+                    for c in (int(x) for x in cd.group(1).split(",") if x):
+                        if c < len(dims):
+                            k *= dims[c]
+                out_elems = _shape_bytes(*res[0])[1]
+                flops += 2.0 * out_elems * k
+                dbytes += out_b
+                for s in (lhs, rhs):
+                    if s:
+                        dbytes += _shape_bytes(*s)[0]
+            elif op == "while":
+                trip = 1
+                mt = _TRIP_RE.search(line)
+                if mt:
+                    trip = int(mt.group(1))
+                n_while += 1
+                mb, mcnd = _BODY_RE.search(line), _COND_RE.search(line)
+                if mb:
+                    edges.append((mb.group(1), trip))
+                if mcnd:
+                    edges.append((mcnd.group(1), trip))
+            elif op in ("fusion", "call", "conditional"):
+                for mr in (_CALLS_RE, _TOAPPLY_RE):
+                    mm = mr.search(line)
+                    if mm:
+                        edges.append((mm.group(1), 1))
+            elif op in COLLECTIVE_KINDS:
+                if not res:
+                    continue
+                out_b = sum(_shape_bytes(d, dims)[0] for d, dims in res)
+                mg = _GROUP_RE.search(line)
+                if mg:
+                    n = len(mg.group(1).split(","))
+                else:
+                    mg2 = _GROUP_V2_RE.search(line)
+                    n = int(mg2.group(2)) if mg2 else 2
+                n = max(n, 2)
+                if op == "all-gather":
+                    wire = (n - 1) / n * out_b
+                elif op == "reduce-scatter":
+                    wire = (n - 1) * out_b
+                elif op == "all-reduce":
+                    wire = 2 * (n - 1) / n * out_b
+                elif op == "all-to-all":
+                    wire = (n - 1) / n * out_b
+                else:
+                    wire = out_b
+                coll[op] += wire
+                counts[op] += 1
+        comp_cost[name] = dict(flops=flops, dbytes=dbytes, coll=dict(coll),
+                               counts=dict(counts), edges=edges, n_while=n_while)
+
+    # ---- pass 3: propagate multipliers from ENTRY --------------------------
+    entry = None
+    for name in comps:
+        if ".main" in name or name.endswith("main") or "main." in name:
+            entry = name
+    if entry is None:  # fall back: the computation nobody calls
+        called = {c for v in comp_cost.values() for c, _ in v["edges"]}
+        roots = [n for n in comps if n not in called]
+        entry = roots[-1] if roots else next(iter(comps))
+
+    total = dict(flops=0.0, dbytes=0.0, n_while=0)
+    coll_total = defaultdict(float)
+    counts_total = defaultdict(int)
+    seen_stack = []
+
+    def walk(name, mult):
+        c = comp_cost.get(name)
+        if c is None or name in seen_stack:
+            return
+        seen_stack.append(name)
+        total["flops"] += mult * c["flops"]
+        total["dbytes"] += mult * c["dbytes"]
+        total["n_while"] += c["n_while"]
+        for k, v in c["coll"].items():
+            coll_total[k] += mult * v
+        for k, v in c["counts"].items():
+            counts_total[k] += v
+        for callee, m in c["edges"]:
+            walk(callee, mult * m)
+        seen_stack.pop()
+
+    walk(entry, 1.0)
+    return ModuleCosts(
+        flops=total["flops"], dot_bytes=total["dbytes"],
+        collective_bytes=sum(coll_total.values()),
+        collective_by_kind=dict(coll_total),
+        collective_counts=dict(counts_total),
+        n_while=total["n_while"],
+    )

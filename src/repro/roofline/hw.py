@@ -1,0 +1,25 @@
+"""Hardware constants for the roofline model (target: TPU v5e)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_link_bw: float         # bytes/s per ICI link
+    hbm_bytes: float           # capacity per chip
+    vmem_bytes: float
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 1024 * 1024 / 8,  # 16 MiB effective scalar+vector memory
+)

@@ -1,0 +1,290 @@
+"""Tests for the energy models, primal solver, master MILP, and GBD loop."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.channel import ChannelModel
+from repro.core.convergence import (
+    ProblemConstants,
+    corollary1_bound,
+    corollary1_lr,
+    corollary2_rounds,
+    error_budget_bound,
+    quant_noise,
+)
+from repro.core.energy import (
+    CommParams,
+    DeviceProfile,
+    alpha_coefficients,
+    heterogeneous_fleet,
+    memory_capacities,
+    round_energy,
+)
+from repro.core.gbd import exhaustive_best, run_gbd
+from repro.core.master import Cut, MasterSpec, solve_master, solve_master_greedy
+from repro.core.primal import (
+    PrimalData,
+    feasibility_cut,
+    optimality_cut,
+    solve_primal,
+    solve_primal_slsqp,
+)
+
+
+def make_instance(n=4, rounds=3, seed=0, b_max=20e6, t_factor=1.5, grad_mb=5.0,
+                  budget_factor=1.5):
+    from repro.core.primal import _round_tmin
+
+    fleet = heterogeneous_fleet(n, seed=seed, group_step_mhz=5.0)
+    ch = ChannelModel(n_devices=n, seed=seed)
+    comm = CommParams(b_max_hz=b_max, grad_bytes=grad_mb * 1e6)
+    gains = ch.gain_matrix(rounds)
+    p_comm = np.array([d.p_comm for d in fleet])
+    a1 = np.zeros((rounds, n))
+    a2 = np.zeros((rounds, n))
+    for r in range(rounds):
+        a1[r], a2[r] = alpha_coefficients(gains[r], p_comm, comm)
+    beta1 = np.array([d.beta1 for d in fleet])
+    beta2 = np.array([d.beta2 for d in fleet])
+    p_comp = np.array([d.runtime_power() for d in fleet])
+    # Deadline that BINDS but stays feasible for every q (q=32 is worst case).
+    tmin32 = _round_tmin(a2, beta1 + 32 * beta2, b_max)
+    t_max = float(t_factor * tmin32.sum())
+    data = PrimalData(alpha1=a1, alpha2=a2, beta1=beta1, beta2=beta2,
+                      p_comp=p_comp, b_max=b_max, t_max=t_max)
+    caps = memory_capacities(n, lo_mb=grad_mb * 0.3, hi_mb=grad_mb * 1.5) * 1e6
+    spec = MasterSpec(
+        bits_options=(8, 16, 32),
+        n_devices=n,
+        error_budget=1.0,  # placeholder, set below from memory feasibility
+        mem_capacity_bytes=caps,
+        model_bytes_fp=grad_mb * 1e6,
+    )
+    # Budget compatible with memory-forced minimum bit-widths (constraint 25
+    # can force 8 bits on small devices; the budget must admit at least that).
+    allowed = spec.allowed()
+    bits = np.asarray(spec.bits_options)
+    forced = np.array([bits[np.flatnonzero(allowed[i])[0]] for i in range(n)])
+    floor = float(np.sum(quant_noise(np.maximum(forced, 8)) ** 2))
+    spec.error_budget = max(floor * budget_factor,
+                            float(np.sum(quant_noise([16] * n) ** 2) * 1.5))
+    return data, spec, fleet, gains, comm
+
+
+class TestEnergyModels:
+    def test_power_positive_and_monotone_in_clock(self):
+        d = DeviceProfile()
+        d_fast = DeviceProfile(f_core=2 * d.f_core)
+        assert d_fast.runtime_power() > d.runtime_power() > 0
+
+    def test_exec_time_linear_in_bits(self):
+        d = DeviceProfile()
+        t8, t16, t32 = (float(d.exec_time(b)) for b in (8, 16, 32))
+        assert t8 < t16 < t32
+        assert (t32 - t16) == pytest.approx(2 * (t16 - t8), rel=1e-9)
+        assert float(d.exec_time(16)) == pytest.approx(d.beta1 + 16 * d.beta2)
+
+    def test_alpha_reformulation_matches_eq21(self):
+        comm = CommParams(b_max_hz=20e6, grad_bytes=1e6)
+        gains = np.array([1e-9, 3e-9])
+        p = np.array([0.1, 0.2])
+        a1, a2 = alpha_coefficients(gains, p, comm)
+        B = np.array([5e6, 7e6])
+        sigma2 = comm.noise_power(comm.b_max_hz)
+        rate = B * np.log1p(gains * p / sigma2)
+        np.testing.assert_allclose(a1 / B, p * 8 * comm.grad_bytes / rate, rtol=1e-12)
+        np.testing.assert_allclose(a2 / B, 8 * comm.grad_bytes / rate, rtol=1e-12)
+
+    def test_round_energy_breakdown(self):
+        data, spec, fleet, gains, comm = make_instance()
+        out = round_energy(np.full(4, 16), np.full(4, 5e6), fleet, gains[0], comm)
+        assert out["energy_total"] > 0
+        assert out["t_round"] >= np.max(out["t_comp"])
+
+    def test_channel_groups_ordered(self):
+        ch = ChannelModel(n_devices=16, seed=3)
+        g = ch.path_gain()
+        groups = ch.group_of()
+        means = [np.mean(np.log10(g[groups == k])) for k in range(4)]
+        # inner rings (higher k) should have better average gain
+        assert means[-1] > means[0]
+
+    def test_gains_vary_by_round(self):
+        ch = ChannelModel(n_devices=4, seed=0)
+        assert not np.allclose(ch.gains(0), ch.gains(1))
+
+
+class TestConvergenceTheory:
+    C = ProblemConstants(L=1.0, tau_sq=4.0, phi=0.5, M=32, N=8, d=1000,
+                         F0_minus_Fstar=2.0)
+
+    def test_bound_decreases_in_R(self):
+        delta = quant_noise([16] * 8)
+        b1 = corollary1_bound(self.C, 100, delta)
+        b2 = corollary1_bound(self.C, 10000, delta)
+        assert b2 < b1
+
+    def test_quant_floor_irreducible(self):
+        delta = quant_noise([8] * 8)
+        floor = 9 * self.C.d * self.C.L**2 / self.C.N * np.sum(delta**2)
+        b = corollary1_bound(self.C, 10**9, delta)
+        assert b == pytest.approx(floor, rel=1e-2)
+
+    def test_more_bits_tighter_bound(self):
+        b8 = corollary1_bound(self.C, 1000, quant_noise([8] * 8))
+        b16 = corollary1_bound(self.C, 1000, quant_noise([16] * 8))
+        b32 = corollary1_bound(self.C, 1000, quant_noise([32] * 8))
+        assert b32 < b16 < b8
+
+    def test_lr_positive_and_small(self):
+        eta = corollary1_lr(self.C, 1000)
+        assert 0 < eta < 1 / (4 * self.C.L)
+
+    def test_corollary2_rounds_scale(self):
+        r1 = corollary2_rounds(self.C, 0.5)
+        r2 = corollary2_rounds(self.C, 0.25)
+        assert r2 > r1 > 0
+        # eps^-2 scaling of the dominant term
+        assert r2 / r1 > 2.0
+
+    def test_error_budget(self):
+        b = error_budget_bound(0.1, 9.0, 1000, 8)
+        assert b == pytest.approx(0.1 * 8 / (9.0 * 1000))
+
+
+class TestPrimal:
+    def test_feasible_and_bandwidth_sums(self):
+        data, spec, *_ = make_instance()
+        sol = solve_primal(data, np.full(4, 16))
+        assert sol.feasible
+        np.testing.assert_allclose(sol.bandwidth.sum(axis=1), data.b_max, rtol=1e-6)
+        assert sol.t_rounds.sum() <= data.t_max * (1 + 1e-9)
+        # latency constraints hold
+        a = data.comp_times(np.full(4, 16))
+        t_needed = a[None, :] + data.alpha2 / sol.bandwidth
+        assert np.all(t_needed <= sol.t_rounds[:, None] * (1 + 1e-6))
+
+    def test_optimality(self):
+        """Three-way optimality check of the dual-bisection solver:
+        (1) value >= unconstrained water-filling floor,
+        (2) SLSQP polish started AT our solution cannot improve it >0.5%,
+        (3) random feasible perturbations never decrease the objective.
+        """
+        from repro.core.primal import _waterfill
+
+        data, spec, *_ = make_instance(n=3, rounds=2)
+        rng = np.random.default_rng(0)
+        for q in ([8, 16, 32], [32, 32, 32], [8, 8, 8]):
+            q = np.array(q)
+            sol = solve_primal(data, q)
+            assert sol.feasible
+            # (1) floor: ignore latency constraints entirely
+            Bf, _ = _waterfill(data.alpha1, np.full_like(data.alpha1, 1.0),
+                               data.b_max)
+            floor = np.sum(data.alpha1 / Bf) + data.comp_energy(q)
+            assert sol.value >= floor - 1e-9
+            # (2) polish
+            x0 = np.concatenate([sol.bandwidth.ravel(), sol.t_rounds])
+            v_polish = solve_primal_slsqp(data, q, x0=x0)
+            assert sol.value <= v_polish * 1.005 + 1e-9
+            # (3) feasible perturbations of the bandwidth split
+            a = data.comp_times(q)
+            for _ in range(20):
+                d = rng.normal(size=sol.bandwidth.shape)
+                d -= d.mean(axis=1, keepdims=True)  # keep sum_i B = B_max
+                B2 = sol.bandwidth + 1e-4 * data.b_max * d
+                if np.any(B2 <= 0):
+                    continue
+                t_need = (a[None, :] + data.alpha2 / B2).max(axis=1)
+                if t_need.sum() > data.t_max:
+                    continue  # infeasible direction
+                v2 = np.sum(data.alpha1 / B2) + data.comp_energy(q)
+                assert v2 >= sol.value - 1e-6 * abs(sol.value)
+
+    def test_infeasible_when_deadline_tiny(self):
+        data, spec, *_ = make_instance()
+        tight = PrimalData(**{**data.__dict__, "t_max": 1e-6})
+        sol = solve_primal(tight, np.full(4, 32))
+        assert not sol.feasible
+        assert np.isfinite(sol.tmin_total)
+        assert sol.tmin_grad_q.shape == (4,)
+        assert np.all(sol.tmin_grad_q >= 0)  # more bits => more time
+
+    def test_energy_decreases_with_more_time(self):
+        # t_factor=1.05: deadline genuinely binds, so relaxing it must help.
+        data, spec, *_ = make_instance(t_factor=1.05)
+        loose = PrimalData(**{**data.__dict__, "t_max": data.t_max * 4})
+        q = np.full(4, 16)
+        assert solve_primal(loose, q).value < solve_primal(data, q).value
+
+    def test_optimality_cut_tight_at_incumbent(self):
+        data, spec, *_ = make_instance()
+        q = np.array([8, 16, 16, 32])
+        sol = solve_primal(data, q)
+        c0, grad = optimality_cut(data, q, sol)
+        assert c0 + grad @ q == pytest.approx(sol.value, rel=1e-9)
+
+    def test_feasibility_cut_separates(self):
+        data, spec, *_ = make_instance()
+        tight = PrimalData(**{**data.__dict__, "t_max": 1e-6})
+        q = np.full(4, 32)
+        sol = solve_primal(tight, q)
+        g, rhs = feasibility_cut(tight, q, sol)
+        assert g @ q > rhs  # the infeasible point is cut off
+
+
+class TestMasterAndGBD:
+    def test_master_one_hot_and_budget(self):
+        data, spec, *_ = make_instance()
+        sol = solve_master(spec, [])
+        assert sol.status == "ok"
+        dsq = quant_noise(sol.q) ** 2
+        assert float(np.sum(dsq)) <= spec.error_budget + 1e-12
+
+    def test_master_respects_memory(self):
+        data, spec, *_ = make_instance()
+        # device capacities in bytes; c3(q) U <= C must hold
+        sol = solve_master(spec, [])
+        need = sol.q / 32.0 * spec.model_bytes_fp
+        assert np.all(need <= spec.mem_capacity_bytes + 1e-9)
+
+    def test_master_greedy_agrees_direction(self):
+        data, spec, *_ = make_instance()
+        cuts = [Cut(kind="opt", c0=1.0, grad=np.ones(4) * 0.1)]
+        milp = solve_master(spec, cuts, use_milp=True)
+        greedy = solve_master_greedy(spec, cuts)
+        assert milp.status == greedy.status == "ok"
+        # both one-hot-feasible w.r.t. budget
+        for s in (milp, greedy):
+            assert float(np.sum(quant_noise(s.q) ** 2)) <= spec.error_budget + 1e-12
+
+    def test_gbd_converges_and_beats_baselines(self):
+        data, spec, *_ = make_instance(n=5, rounds=3, seed=2)
+        res = run_gbd(data, spec, max_rounds=25)
+        assert res.converged
+        assert res.gap <= max(1e-3, 1e-4 * abs(res.energy)) + 1e-9
+        fp = baselines.full_precision(data, spec)
+        uq = baselines.unified_q(data, spec, bits=16)
+        assert res.energy <= fp.energy * (1 + 1e-9)
+        assert res.energy <= uq.energy * (1 + 1e-9)
+
+    def test_gbd_matches_exhaustive_small(self):
+        data, spec, *_ = make_instance(n=3, rounds=2, seed=1)
+        res = run_gbd(data, spec, max_rounds=30)
+        q_star, v_star = exhaustive_best(data, spec)
+        assert res.energy == pytest.approx(v_star, rel=5e-3)
+
+    def test_rand_q_reproducible(self):
+        data, spec, *_ = make_instance()
+        a = baselines.rand_q(data, spec, seed=7)
+        b = baselines.rand_q(data, spec, seed=7)
+        np.testing.assert_array_equal(a.q, b.q)
+
+    def test_ub_nonincreasing_lb_nondecreasing(self):
+        data, spec, *_ = make_instance(n=5, rounds=3, seed=4)
+        res = run_gbd(data, spec, max_rounds=25)
+        ubs = [t["ub"] for t in res.trace]
+        lbs = [t["lb"] for t in res.trace]
+        assert all(u2 <= u1 + 1e-9 for u1, u2 in zip(ubs, ubs[1:]))
+        assert all(l2 >= l1 - 1e-9 for l1, l2 in zip(lbs, lbs[1:]))

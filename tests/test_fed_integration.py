@@ -1,0 +1,191 @@
+"""End-to-end federated system tests: FWQ simulator + orchestrator +
+checkpoint/restart + straggler/dropout handling + data pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.energy import heterogeneous_fleet, memory_capacities
+from repro.data import ClientBatcher, SyntheticImages, dirichlet_partition
+from repro.data.partition import heterogeneity_phi
+from repro.fed import FLOrchestrator, FLSimulation, OrchestratorConfig, SimConfig
+from repro.models.cnn import mobilenet, resnet, xent_loss
+
+
+def make_sim(n_clients=6, seed=0, lr=0.2, kind="resnet"):
+    model = (resnet(depth_blocks=(1, 1), width=8) if kind == "resnet"
+             else mobilenet(width=8, n_stages=2))
+    loss = xent_loss(model)
+    sim = FLSimulation(loss, model.init, SimConfig(n_clients=n_clients,
+                                                   lr=lr, seed=seed))
+    return sim, model, loss
+
+
+def make_data(n=512, n_clients=6, seed=0):
+    imgs, labels = SyntheticImages(n=n, hw=16, seed=seed).generate()
+    parts = dirichlet_partition(labels, n_clients, alpha=0.5, seed=seed)
+    return ClientBatcher(imgs, labels, parts, batch=16, seed=seed)
+
+
+def batch_fn_for(batcher):
+    def fn(round_idx, cohort):
+        x, y = batcher.sample_round(round_idx, cohort)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+    return fn
+
+
+class TestSimulation:
+    def test_fwq_rounds_reduce_loss(self):
+        sim, model, loss = make_sim()
+        batcher = make_data()
+        fn = batch_fn_for(batcher)
+        bits = np.array([8, 8, 16, 16, 32, 32])
+        losses = []
+        for r in range(30):
+            rec = sim.run_round(fn(r, np.arange(6)), bits)
+            losses.append(rec["loss"])
+        assert np.isfinite(losses[-1])
+        # robust improvement check: best-of-last-5 clearly below round 0
+        assert min(losses[-5:]) < losses[0] - 0.02, losses[::6]
+
+    def test_quantized_worse_or_equal_than_full(self):
+        """Discretization error (Cor. 1): aggressive quantization shouldn't
+        beat full precision on the same data/seeds (paper Fig. 2 trend)."""
+        losses = {}
+        for name, bits in [("fp", [32] * 6), ("q2", [2] * 6)]:
+            sim, *_ = make_sim(seed=3)
+            batcher = make_data(seed=3)
+            fn = batch_fn_for(batcher)
+            for r in range(20):
+                rec = sim.run_round(fn(r, np.arange(6)), np.array(bits))
+            losses[name] = rec["loss"]
+        assert losses["fp"] <= losses["q2"] + 0.05
+
+    def test_elastic_cohort_sizes(self):
+        sim, *_ = make_sim()
+        batcher = make_data()
+        fn = batch_fn_for(batcher)
+        sim.run_round(fn(0, np.arange(6)), np.full(6, 16))
+        sim.run_round(fn(1, np.arange(4)), np.full(4, 16))   # shrink
+        rec = sim.run_round(fn(2, np.arange(6)), np.full(6, 16))
+        assert np.isfinite(rec["loss"])
+
+    def test_deterministic_given_seed(self):
+        outs = []
+        for _ in range(2):
+            sim, *_ = make_sim(seed=11)
+            batcher = make_data(seed=11)
+            fn = batch_fn_for(batcher)
+            for r in range(3):
+                rec = sim.run_round(fn(r, np.arange(6)), np.full(6, 8))
+            outs.append(rec["loss"])
+        assert outs[0] == outs[1]
+
+
+class TestOrchestrator:
+    def _orch(self, n=6, rounds=8, tmp="", **kw):
+        fleet = heterogeneous_fleet(n, seed=0, group_step_mhz=5.0)
+        caps = memory_capacities(n, lo_mb=2.0, hi_mb=8.0) * 1e6
+        cfg = OrchestratorConfig(n_devices=n, n_rounds=rounds,
+                                 model_dim_d=1 << 16, ckpt_dir=tmp, **kw)
+        return FLOrchestrator(cfg, fleet, caps, grad_bytes=1e6)
+
+    def test_full_run_with_energy_accounting(self):
+        orch = self._orch()
+        sim, *_ = make_sim()
+        out = orch.run(sim, batch_fn_for(make_data()))
+        assert out["total_energy_j"] > 0
+        assert out["total_time_s"] > 0
+        assert len(out["history"]) == 8
+        q = out["energy_log"][0]["q"]
+        assert set(np.unique(q)).issubset({8, 16, 32})
+
+    def test_fwq_beats_baselines_on_energy(self):
+        energies = {}
+        for scheme in ("fwq", "full_precision", "unified_q", "rand_q"):
+            orch = self._orch(scheme=scheme, rounds=4)
+            sim, *_ = make_sim()
+            out = orch.run(sim, batch_fn_for(make_data()))
+            energies[scheme] = out["total_energy_j"]
+        assert energies["fwq"] <= energies["full_precision"] * (1 + 1e-6)
+        assert energies["fwq"] <= energies["unified_q"] * (1 + 1e-6)
+
+    def test_straggler_and_dropout_handling(self):
+        orch = self._orch(dropout_prob=0.3, straggler_slack=1.0, rounds=6)
+        sim, *_ = make_sim()
+        out = orch.run(sim, batch_fn_for(make_data()))
+        assert len(out["history"]) == 6
+        sizes = [r["cohort_size"] for r in out["history"]]
+        assert min(sizes) >= 1
+        assert any(s < 6 for s in sizes)  # some rounds lost clients
+
+    def test_checkpoint_restart_bit_identical(self, tmp_path):
+        ck = str(tmp_path / "ck")
+        # run 1: all 8 rounds straight through
+        orch = self._orch(rounds=8, tmp=ck + "_a", ckpt_every=2)
+        sim, *_ = make_sim(seed=5)
+        out_a = orch.run(sim, batch_fn_for(make_data(seed=5)))
+        # run 2: crash after 4 rounds, then resume
+        orch_b = self._orch(rounds=4, tmp=ck + "_b", ckpt_every=2)
+        sim_b, *_ = make_sim(seed=5)
+        orch_b.run(sim_b, batch_fn_for(make_data(seed=5)))
+        orch_c = self._orch(rounds=8, tmp=ck + "_b", ckpt_every=2)
+        sim_c, *_ = make_sim(seed=5)
+        out_c = orch_c.run(sim_c, batch_fn_for(make_data(seed=5)))
+        assert out_a["history"][-1]["loss"] == pytest.approx(
+            out_c["history"][-1]["loss"], abs=1e-6)
+
+
+class TestData:
+    def test_dirichlet_partition_covers(self):
+        _, labels = SyntheticImages(n=1000, hw=8).generate()
+        parts = dirichlet_partition(labels, 10, alpha=0.3)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == len(labels)
+        assert len(np.unique(allidx)) == len(labels)
+
+    def test_lower_alpha_more_heterogeneous(self):
+        _, labels = SyntheticImages(n=4000, hw=8).generate()
+        phi_lo = heterogeneity_phi(labels, dirichlet_partition(labels, 8, alpha=0.1, seed=1))
+        phi_hi = heterogeneity_phi(labels, dirichlet_partition(labels, 8, alpha=100.0, seed=1))
+        assert phi_lo > phi_hi
+
+    def test_batcher_deterministic(self):
+        b = make_data()
+        x1, y1 = b.sample_round(3, np.array([0, 1]))
+        x2, y2 = b.sample_round(3, np.array([0, 1]))
+        np.testing.assert_array_equal(x1, x2)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_verify(self, tmp_path):
+        from repro.ckpt import load_checkpoint, save_checkpoint
+        tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+        save_checkpoint(str(tmp_path), 7, tree)
+        out, manifest = load_checkpoint(str(tmp_path), tree)
+        assert manifest["step"] == 7
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(10.0))
+
+    def test_corruption_detected(self, tmp_path):
+        from repro.ckpt import load_checkpoint, save_checkpoint
+        import numpy as np
+        tree = {"a": jnp.arange(4.0)}
+        path = save_checkpoint(str(tmp_path), 1, tree)
+        data = dict(np.load(path))
+        data["a"] = data["a"] + 1
+        np.savez(path, **data)
+        with pytest.raises(ValueError):
+            load_checkpoint(str(tmp_path), tree)
+
+    def test_gc_keeps_latest(self, tmp_path):
+        from repro.ckpt import save_checkpoint, latest_step
+        from repro.ckpt.checkpoint import latest_step as ls
+        tree = {"a": jnp.zeros(2)}
+        for s in range(6):
+            save_checkpoint(str(tmp_path), s, tree, keep=2)
+        assert ls(str(tmp_path)) == 5
+        npz = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+        assert len(npz) == 2

@@ -1,0 +1,161 @@
+"""Unit + property tests for SR quantization (paper Eq. 1 / Lemma 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+def key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+class TestDelta:
+    def test_delta_values(self):
+        assert float(q.delta_from_bits(8)) == pytest.approx(1 / 255)
+        assert float(q.delta_from_bits(16)) == pytest.approx(1 / 65535)
+        assert float(q.delta_from_bits(32)) == 0.0
+
+    def test_delta_vector(self):
+        d = q.delta_from_bits(jnp.array([8, 16, 32]))
+        np.testing.assert_allclose(
+            np.asarray(d), [1 / 255, 1 / 65535, 0.0], rtol=1e-6
+        )
+
+
+class TestSRQuantize:
+    def test_full_precision_bypass(self):
+        w = jax.random.normal(key(1), (64, 64))
+        out = q.sr_quantize(w, 0.0, key(2))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+    def test_values_on_grid(self):
+        w = jax.random.normal(key(3), (256,))
+        delta = float(q.delta_from_bits(8))
+        out = np.asarray(q.sr_quantize(w, delta, key(4)), np.float64)
+        s = float(np.max(np.abs(np.asarray(w))))
+        codes = out / (s * delta)
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+    def test_unbiased(self):
+        """SR property: E[Q(w)] = w (paper §2.1)."""
+        w = jnp.array([0.3, -0.7, 0.123, 0.999])
+        delta = float(q.delta_from_bits(4))
+        reps = 4096
+        outs = jax.vmap(lambda k: q.sr_quantize(w, delta, k))(
+            jax.random.split(key(5), reps)
+        )
+        mean = np.asarray(outs).mean(axis=0)
+        s = float(jnp.max(jnp.abs(w)))
+        tol = 3 * s * delta / np.sqrt(reps) + 1e-4
+        np.testing.assert_allclose(mean, np.asarray(w), atol=tol * 4)
+
+    def test_error_bound_lemma3(self):
+        """E||Q(w)-w||^2 <= (d/4) * delta^2 (per-tensor, real units)."""
+        w = jax.random.normal(key(6), (512,))
+        for bits in (4, 8):
+            delta = float(q.delta_from_bits(bits))
+            s = float(jnp.max(jnp.abs(w)))
+            outs = jax.vmap(lambda k: q.sr_quantize(w, delta, k))(
+                jax.random.split(key(7), 256)
+            )
+            err = np.mean(np.sum((np.asarray(outs) - np.asarray(w)[None]) ** 2, -1))
+            bound = w.size / 4 * (s * delta) ** 2
+            assert err <= bound * 1.05
+
+    def test_max_magnitude_preserved(self):
+        w = jax.random.normal(key(8), (128,))
+        out = q.sr_quantize(w, float(q.delta_from_bits(8)), key(9))
+        s = float(jnp.max(jnp.abs(w)))
+        assert float(jnp.max(jnp.abs(out))) <= s + 1e-6
+
+    def test_traced_delta_jit(self):
+        """delta can be a traced scalar — one program for all bit-widths."""
+        w = jax.random.normal(key(10), (64,))
+
+        @jax.jit
+        def f(delta):
+            return q.sr_quantize(w, delta, key(11))
+
+        out8 = f(q.delta_from_bits(8))
+        out_fp = f(jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(out_fp), np.asarray(w))
+        assert not np.array_equal(np.asarray(out8), np.asarray(w))
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        bits=st.sampled_from([2, 4, 8, 12]),
+        seed=st.integers(0, 2**16),
+        n=st.integers(2, 300),
+    )
+    def test_property_grid_and_range(self, bits, seed, n):
+        w = jax.random.normal(key(seed), (n,))
+        delta = float(q.delta_from_bits(bits))
+        out = np.asarray(q.sr_quantize(w, delta, key(seed + 1)), np.float64)
+        s = float(np.max(np.abs(np.asarray(w))))
+        assert np.all(np.abs(out) <= s * (1 + 1e-5))
+        codes = out / (s * delta)
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-2)
+
+
+class TestPacked:
+    @pytest.mark.parametrize("bits", [2, 4, 7, 8, 12, 15])
+    def test_roundtrip_error(self, bits):
+        w = jax.random.normal(key(20), (64, 128))
+        p = q.pack_quantize(w, bits, key(21))
+        deq = np.asarray(q.dequantize(p))
+        s = float(jnp.max(jnp.abs(w)))
+        step = s / (2**bits - 1)
+        assert np.max(np.abs(deq - np.asarray(w))) <= step * 1.01
+
+    def test_storage_dtype(self):
+        assert q.pack_quantize(jnp.ones((4, 4)), 7, key(0)).codes.dtype == jnp.int8
+        assert q.pack_quantize(jnp.ones((4, 4)), 8, key(0)).codes.dtype == jnp.int16
+
+    def test_per_channel(self):
+        w = jnp.concatenate([jnp.ones((8, 4)) * 10.0, jnp.ones((8, 4)) * 0.1], 1)
+        p = q.pack_quantize(w, 8, key(1), per_channel=True, axis=0)
+        deq = np.asarray(q.dequantize(p))
+        np.testing.assert_allclose(deq, np.asarray(w), rtol=2e-2)
+
+    def test_memory_savings(self):
+        w = jnp.zeros((256, 256)) + 0.5
+        p = q.pack_quantize(w, 7, key(2))
+        assert p.nbytes() < w.size * 4 / 3.9
+
+
+class TestTree:
+    def _params(self):
+        return {
+            "dense": {"kernel": jax.random.normal(key(30), (32, 32)),
+                      "bias": jnp.zeros((32,))},
+            "norm": {"scale": jnp.ones((32,))},
+        }
+
+    def test_exemptions(self):
+        p = self._params()
+        out = q.quantize_tree(p, float(q.delta_from_bits(4)), key(31))
+        np.testing.assert_array_equal(np.asarray(out["norm"]["scale"]),
+                                      np.asarray(p["norm"]["scale"]))
+        np.testing.assert_array_equal(np.asarray(out["dense"]["bias"]),
+                                      np.asarray(p["dense"]["bias"]))
+        assert not np.array_equal(np.asarray(out["dense"]["kernel"]),
+                                  np.asarray(p["dense"]["kernel"]))
+
+    def test_quantizable_size(self):
+        p = self._params()
+        quant, total = q.quantizable_size(p)
+        assert quant == 32 * 32
+        assert total == 32 * 32 + 2 * 32
+
+    def test_no_exempt(self):
+        p = self._params()
+        # off-grid values so quantization must move them
+        p["norm"]["scale"] = p["norm"]["scale"] * 0.737
+        p["norm"]["scale"] = p["norm"]["scale"].at[0].set(1.0)  # sets s = 1
+        out = q.quantize_tree(p, float(q.delta_from_bits(2)), key(32), exempt=None)
+        assert not np.array_equal(np.asarray(out["norm"]["scale"]),
+                                  np.asarray(p["norm"]["scale"]))

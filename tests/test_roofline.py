@@ -1,0 +1,115 @@
+"""Roofline machinery: structural HLO parsing (loop-aware) + term math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_parse import parse_module
+from repro.roofline.hw import TPU_V5E
+
+
+def _compile(f, *sds):
+    return jax.jit(f).lower(*sds).compile()
+
+
+class TestHloParse:
+    def test_plain_dot_flops_exact(self):
+        m, k, n = 128, 256, 64
+        co = _compile(lambda a, b: a @ b,
+                      jax.ShapeDtypeStruct((m, k), jnp.float32),
+                      jax.ShapeDtypeStruct((k, n), jnp.float32))
+        mc = parse_module(co.as_text())
+        assert mc.flops == pytest.approx(2 * m * k * n, rel=1e-6)
+        assert mc.dot_bytes == pytest.approx(4 * (m * k + k * n + m * n), rel=1e-6)
+
+    def test_scan_multiplies_by_trip_count(self):
+        L, d = 7, 64
+
+        def f(w, x):
+            def body(h, wl):
+                return jnp.tanh(h @ wl), ()
+            h, _ = jax.lax.scan(body, x, w)
+            return h
+
+        co = _compile(f, jax.ShapeDtypeStruct((L, d, d), jnp.float32),
+                      jax.ShapeDtypeStruct((8, d), jnp.float32))
+        mc = parse_module(co.as_text())
+        # XLA cost_analysis counts the body once; the parser must count L times
+        ca = co.cost_analysis()
+        assert mc.flops == pytest.approx(L * 2 * 8 * d * d, rel=0.05)
+        assert mc.flops > float(ca.get("flops", 0)) * 2  # cost_analysis understates
+        assert mc.n_while >= 1
+
+    def test_batched_dot(self):
+        co = _compile(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                      jax.ShapeDtypeStruct((4, 32, 16), jnp.float32),
+                      jax.ShapeDtypeStruct((4, 16, 8), jnp.float32))
+        mc = parse_module(co.as_text())
+        assert mc.flops == pytest.approx(2 * 4 * 32 * 16 * 8, rel=1e-6)
+
+    def test_no_dots_no_flops(self):
+        co = _compile(lambda x: jnp.sin(x) + 1,
+                      jax.ShapeDtypeStruct((128,), jnp.float32))
+        mc = parse_module(co.as_text())
+        assert mc.flops == 0.0
+        assert mc.collective_bytes == 0.0
+
+    def test_bf16_equiv_rescale(self):
+        co = _compile(lambda a, b: a @ b,
+                      jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                      jax.ShapeDtypeStruct((64, 64), jnp.float32))
+        txt = co.as_text()
+        full = parse_module(txt)
+        half = parse_module(txt.replace("f32[", "bf16["))
+        assert half.dot_bytes == pytest.approx(full.dot_bytes / 2, rel=1e-6)
+        assert half.flops == pytest.approx(full.flops, rel=1e-6)
+
+
+class TestTerms:
+    def test_chip_constants(self):
+        assert TPU_V5E.peak_flops_bf16 == pytest.approx(197e12)
+        assert TPU_V5E.hbm_bw == pytest.approx(819e9)
+        assert TPU_V5E.ici_link_bw == pytest.approx(50e9)
+
+    def test_model_flops(self):
+        from repro.configs import get_config
+        from repro.roofline.analysis import model_flops
+        cfg = get_config("yi-6b")
+        n = cfg.active_param_count()
+        assert model_flops(cfg, "train", 4096, 256) == pytest.approx(
+            6 * n * 4096 * 256)
+        assert model_flops(cfg, "decode", 32768, 128) == pytest.approx(
+            2 * n * 128)
+
+
+class TestCollectiveParse:
+    def test_collectives_counted_with_wire_model(self):
+        import os
+        import subprocess
+        import sys
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.roofline.hlo_parse import parse_module
+mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+def f(a):
+    g = jax.lax.all_gather(a, "x", axis=0, tiled=True)   # (64, 32) f32
+    return jax.lax.psum(jnp.sum(g), "x")
+sm = jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P(), check_vma=False)
+co = jax.jit(sm).lower(jax.ShapeDtypeStruct((64, 32), jnp.float32)).compile()
+mc = parse_module(co.as_text())
+ag = mc.collective_by_kind.get("all-gather", 0)
+expect = (4 - 1) / 4 * 64 * 32 * 4
+assert abs(ag - expect) / expect < 1e-6, (ag, expect)
+assert mc.collective_counts.get("all-reduce", 0) >= 1
+print("OK")
+"""
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, env=env,
+                             timeout=300)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout

@@ -1,0 +1,96 @@
+"""Sharding-rule table unit tests: TP/FSDP dims per parameter path, spec
+construction, and init/use consistency (the invariants the dry-run relies on)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.dist.collectives import AxisCtx
+from repro.dist.sharding import tp_dim, tree_param_specs
+from repro.models.common import fsdp_participates, fsdp_shard_dim
+from repro.models.model import build_model
+
+
+class TestTPDim:
+    @pytest.mark.parametrize("path,ndim,kv,expect", [
+        ("blocks/attn/wq", 2, True, 1),
+        ("blocks/attn/wk", 2, True, 1),
+        ("blocks/attn/wk", 2, False, None),    # replicated KV
+        ("blocks/attn/wo", 2, True, 0),
+        ("blocks/mlp/w_up", 2, True, 1),
+        ("blocks/mlp/w_gate", 2, True, 1),
+        ("blocks/mlp/w_down", 2, True, 0),
+        ("blocks/moe/w_up", 3, True, 0),       # expert dim
+        ("blocks/moe/w_down", 3, True, 0),
+        ("embed/table", 2, True, 0),           # vocab rows
+        ("unembed/w", 2, True, 1),             # vocab cols
+        ("blocks/ssm/wx", 2, True, 1),
+        ("blocks/ssm/w_bc", 2, True, None),    # replicated (single group)
+        ("blocks/ssm/conv_x", 2, True, 1),
+        ("blocks/ssm/norm", 1, True, 0),       # gated-norm over d_inner_local
+        ("blocks/ssm/a_log", 1, True, 0),
+        ("blocks/ln1", 1, True, None),
+        ("adapter", 2, True, None),
+    ])
+    def test_table(self, path, ndim, kv, expect):
+        assert tp_dim(path, ndim, kv) == expect
+
+
+class TestFSDPRules:
+    def test_shard_dim_defaults_and_exceptions(self):
+        assert fsdp_shard_dim("blocks/attn/wq", 2) == 0        # d_model rows
+        assert fsdp_shard_dim("blocks/mlp/w_down", 2) == 1     # exception
+        assert fsdp_shard_dim("embed/table", 2) == 1           # exception
+        assert fsdp_shard_dim("blocks/moe/w_up", 3) == 1       # d dim
+
+    def test_participation_scale_free(self):
+        """The decision must be identical on sharded and unsharded shapes."""
+        full = (4096, 512)
+        sharded = (4096 // 16, 512)   # dim0 is the rule dim for wq
+        assert fsdp_participates("blocks/attn/wq", full, 16) == \
+            fsdp_participates("blocks/attn/wq", sharded, 16)
+
+    def test_small_and_excluded(self):
+        assert not fsdp_participates("blocks/ssm/conv_x", (4, 3072), 16)
+        assert not fsdp_participates("blocks/moe/router", (4096, 128), 16)
+        assert not fsdp_participates("blocks/ln1", (4096,), 16)
+        assert not fsdp_participates("x", (64, 8), 16)  # other dims too small
+
+
+class TestSpecsCoverAllArchs:
+    @pytest.mark.parametrize("arch", ARCH_NAMES)
+    def test_specs_consistent_with_storage(self, arch):
+        """Every leaf gets a spec whose sharded dims divide the stored shape,
+        at both single-pod (fsdp=16) and multi-pod (fsdp=32) sizes."""
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda key: model.init(key, 16),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        for fsdp, batch_axes in ((16, ("data",)), (32, ("pod", "data"))):
+            axes = AxisCtx(batch_axes=batch_axes, model_axis="model",
+                           fsdp_axes=batch_axes)
+            specs = tree_param_specs(shapes, cfg, axes, fsdp)
+            flat_l = jax.tree_util.tree_leaves(shapes)
+            flat_s = jax.tree_util.tree_leaves(
+                specs, is_leaf=lambda x: hasattr(x, "index") or x is None)
+            assert len(flat_l) == len(flat_s)
+            for leaf, spec in zip(flat_l, flat_s):
+                if spec is None:
+                    continue
+                for d, entry in enumerate(tuple(spec)):
+                    if entry is None:
+                        continue
+                    names = entry if isinstance(entry, tuple) else (entry,)
+                    factor = 1
+                    for nm in names:
+                        factor *= {"model": 16, "data": 16 if fsdp == 16 else 16,
+                                   "pod": 2}[nm]
+                    # spec axes beyond tp were already applied to storage:
+                    # only the fsdp factor must still divide the stored dim
+                    fs = 1
+                    for nm in names:
+                        if nm in batch_axes:
+                            fs *= {"data": 16, "pod": 2}[nm]
+                    assert leaf.shape[d] % fs == 0, (arch, leaf.shape, spec, d)

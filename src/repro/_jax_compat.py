@@ -1,0 +1,89 @@
+"""Forward-compatibility shims for the pinned jax in this container.
+
+The codebase (and the subprocess scripts embedded in the tests) target the
+modern mesh/shard_map surface:
+
+* ``jax.make_mesh(shape, names, axis_types=...)``
+* ``jax.sharding.AxisType.{Auto,Explicit,Manual}``
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+
+On older jax (0.4.x) those spell ``jax.make_mesh`` without ``axis_types``,
+no ``AxisType`` enum, and ``jax.experimental.shard_map.shard_map`` with the
+``check_rep`` keyword.  :func:`install` bridges the gap by installing thin
+adapters onto the ``jax`` module — only for attributes that are missing, so
+on a modern jax this is a no-op.  It is idempotent and runs on ``import
+repro`` (see ``repro/__init__.py``), which every entry point and test
+script hits before touching jax meshes.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding
+
+_INSTALLED = False
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def install() -> None:
+    global _INSTALLED
+    if _INSTALLED:
+        return
+    _INSTALLED = True
+
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    # --- make_mesh: provide it, or tolerate (and drop) axis_types ---------
+    _orig_make_mesh = getattr(jax, "make_mesh", None)
+    if _orig_make_mesh is None:        # pre-0.4.35 jax: build the Mesh by hand
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None, **kw):
+            del axis_types, kw
+            import numpy as np
+
+            devs = np.asarray(devices if devices is not None
+                              else jax.devices())
+            n = int(np.prod(axis_shapes))
+            return jax.sharding.Mesh(devs[:n].reshape(tuple(axis_shapes)),
+                                     tuple(axis_names))
+
+        jax.make_mesh = make_mesh
+    else:
+        try:
+            import inspect
+
+            accepts_axis_types = "axis_types" in inspect.signature(
+                _orig_make_mesh).parameters
+        except (TypeError, ValueError):  # pragma: no cover - exotic builds
+            accepts_axis_types = True
+        if not accepts_axis_types:
+
+            @functools.wraps(_orig_make_mesh)
+            def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+                del axis_types  # pre-AxisType jax: shard_map treats as Auto
+                return _orig_make_mesh(axis_shapes, axis_names, **kw)
+
+            jax.make_mesh = make_mesh
+
+    # --- shard_map: top-level alias with check_vma -> check_rep -----------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _esm
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      check_rep=None, **kw):
+            if check_rep is None:
+                check_rep = True if check_vma is None else bool(check_vma)
+            return _esm(f, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=check_rep, **kw)
+
+        jax.shard_map = shard_map

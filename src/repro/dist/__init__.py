@@ -1,0 +1,15 @@
+"""Distribution layer: mesh-axis context, collectives, and sharding rules.
+
+``collectives`` carries :class:`AxisCtx` (the named-axis context threaded
+through all model code) and the SR-quantized gradient all-reduce;
+``sharding`` maps parameter paths / batches / decode caches to
+``PartitionSpec`` layouts for ``shard_map``.
+"""
+
+from repro.dist.collectives import AxisCtx, quantized_psum_batch  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    tp_dim,
+    tree_param_specs,
+)

@@ -1,0 +1,188 @@
+"""Mesh-axis context and collectives for the shard_map model zoo.
+
+:class:`AxisCtx` is the one object threaded through every layer (via
+``ParamCtx.ctx``): it names the mesh axes a computation runs under and turns
+them into sizes, indices, and collectives.  All model code is *local
+per-shard* code (Megatron-JAX style), so the context is how a layer asks
+"which tensor-parallel rank am I" or "all-reduce this over the clients".
+
+Design rules
+------------
+* **Sizes are static.**  ``ctx.dp`` / ``ctx.tp`` / ``ctx.fsdp`` use the
+  constant-folding of ``lax.psum(1, axis)``, which inside ``shard_map``
+  returns a Python int.  That staticness is load-bearing: the FSDP
+  participation rules in :mod:`repro.models.common` branch on these values
+  at trace time.  Outside any mesh context every size is 1 and every index
+  is 0, so the same model code runs unsharded (unit tests, ``eval_shape``
+  probes) with all collectives degenerating to identities.
+* **Flattened batch index.**  Multi-axis data parallelism (``("pod",
+  "data")``) is flattened row-major by ``lax.axis_index`` with the axis
+  tuple; ``lax.all_gather`` over the same tuple tiles in the identical
+  order, so the FSDP slice/gather pair in ``models/common.py`` round-trips
+  by construction.
+* **Quantized gradient all-reduce.**  :func:`quantized_psum_batch` is the
+  paper's Eq. 1 stochastic-rounding quantizer applied to *model updates on
+  the wire* (cf. arXiv:2402.12957, arXiv:1911.02417): clients agree on a
+  shared grid via a ``pmax`` of the per-client scale, SR-quantize onto
+  integer codes, ``psum`` the codes (integers sum exactly — no
+  re-quantization error at the server), and dequantize to the mean.
+  Unbiased for every bit-width because SR is unbiased per client.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import _jax_compat
+from repro.core.quantization import FULL_PRECISION_BITS, _sr_round
+
+_jax_compat.install()
+
+
+def _axis_size(names: tuple[str, ...]) -> int:
+    """Static product of the named axis sizes; 1 when unbound/empty.
+
+    ``lax.psum`` of a Python constant is constant-folded to ``size * x``
+    inside shard_map/pmap, so this is a trace-time int, not a tracer.
+    """
+    if not names:
+        return 1
+    try:
+        return int(jax.lax.psum(1, names if len(names) > 1 else names[0]))
+    except NameError:      # outside any mesh context (eval_shape, unit tests)
+        return 1
+
+
+def _axis_index(names: tuple[str, ...]):
+    """Flattened (row-major) index over ``names``; 0 when unbound/empty."""
+    if not names:
+        return 0
+    try:
+        return jax.lax.axis_index(names if len(names) > 1 else names[0])
+    except NameError:
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisCtx:
+    """Named mesh axes of one launch configuration.
+
+    ``batch_axes``: data-parallel axes — one FL client per group.
+    ``model_axis``: tensor-parallel axis (None = no TP).
+    ``fsdp_axes``:  axes parameters are fully-sharded over (in practice the
+    batch axes: FSDP rides on data parallelism).
+    """
+
+    batch_axes: tuple[str, ...]
+    model_axis: str | None
+    fsdp_axes: tuple[str, ...]
+
+    # --- static sizes ----------------------------------------------------
+    @property
+    def dp(self) -> int:
+        """Number of data-parallel groups (= FL clients) in scope."""
+        return _axis_size(tuple(self.batch_axes))
+
+    @property
+    def tp(self) -> int:
+        return _axis_size((self.model_axis,) if self.model_axis else ())
+
+    @property
+    def fsdp(self) -> int:
+        return _axis_size(tuple(self.fsdp_axes))
+
+    # --- indices ---------------------------------------------------------
+    def dp_index(self):
+        """Flattened data-parallel rank (client id); 0 outside a mesh."""
+        return _axis_index(tuple(self.batch_axes))
+
+    def tp_index(self):
+        return _axis_index((self.model_axis,) if self.model_axis else ())
+
+    # --- model-axis collectives -----------------------------------------
+    def psum_model(self, x):
+        if self.model_axis is None:
+            return x
+        return jax.lax.psum(x, self.model_axis)
+
+    def pmean_model(self, x):
+        if self.model_axis is None:
+            return x
+        return jax.lax.pmean(x, self.model_axis)
+
+    def all_gather_model(self, x, *, axis: int):
+        if self.model_axis is None:
+            return x
+        return jax.lax.all_gather(x, self.model_axis, axis=axis, tiled=True)
+
+    def psum_scatter_model(self, x, *, axis: int):
+        if self.model_axis is None:
+            return x
+        return jax.lax.psum_scatter(x, self.model_axis,
+                                    scatter_dimension=axis, tiled=True)
+
+    # --- batch/FSDP collectives -----------------------------------------
+    def psum_batch(self, x):
+        if not self.batch_axes:
+            return x
+        return jax.lax.psum(x, tuple(self.batch_axes))
+
+    def pmean_batch(self, x):
+        if not self.batch_axes:
+            return x
+        return jax.lax.pmean(x, tuple(self.batch_axes))
+
+    def gather_fsdp(self, x, *, axis: int):
+        """Tiled all-gather of FSDP-sharded storage along ``axis``.
+
+        The transpose under autodiff is a reduce-scatter, which is what
+        makes FSDP gradients come back sharded for free (DESIGN.md §4).
+        """
+        if self.fsdp == 1:
+            return x
+        names = tuple(self.fsdp_axes)
+        return jax.lax.all_gather(x, names if len(names) > 1 else names[0],
+                                  axis=axis, tiled=True)
+
+
+def quantized_psum_batch(axes: AxisCtx, grad, rng, bits):
+    """SR-quantized all-reduce **mean** of ``grad`` over the batch axes.
+
+    Drop-in replacement for ``lax.pmean(grad, batch_axes)`` that moves
+    ``bits``-wide integer codes on the wire instead of f32:
+
+    1. shared grid: ``s = pmax_i max|g_i|``, resolution ``delta = 1/(2^b-1)``
+       (paper Eq. 1 with the scale agreed across clients so codes are
+       summable);
+    2. each client stochastically rounds ``g_i / (s*delta)`` to integers
+       with an independent key (folded by client id) — unbiased per Eq. 1;
+    3. ``psum`` the codes: integer sums are exact, so the only error is the
+       per-client SR noise — the server introduces none;
+    4. dequantize and divide by the client count -> the mean.
+
+    ``bits >= 32`` bypasses quantization (exact ``pmean``); a 1-group
+    context is a no-op.  Returns E[out] == pmean(grad) for every bit-width.
+    """
+    n = axes.dp
+    if n == 1:
+        return grad                       # single client: nothing to reduce
+    ax = tuple(axes.batch_axes)
+    if int(bits) >= FULL_PRECISION_BITS:
+        return jax.lax.pmean(grad, ax)    # full precision: exact mean
+
+    gf = grad.astype(jnp.float32)
+    s = jax.lax.pmax(jnp.max(jnp.abs(gf)), ax)
+    s = jnp.where(s > 0, s, 1.0)
+    lim = 2.0 ** int(bits) - 1.0
+    step = s / lim                        # = s * Delta_q, the grid pitch
+    ckey = jax.random.fold_in(rng, axes.dp_index())
+    codes = _sr_round(gf / step, ckey)
+    codes = jnp.clip(codes, -lim, lim)    # numeric guard; |t| <= lim already
+    # Sum in int32 so the accumulation is exact (f32 would round past 2^24:
+    # already reachable at bits=16 with ~257 clients).  Exact for
+    # n * (2^bits - 1) < 2^31 — every paper bit-width on any mesh here.
+    total = jax.lax.psum(codes.astype(jnp.int32), ax)
+    return ((total.astype(jnp.float32) * step) / n).astype(grad.dtype)

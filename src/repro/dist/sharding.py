@@ -1,0 +1,201 @@
+"""Sharding-rule table: parameter/batch/cache PartitionSpecs for shard_map.
+
+The model zoo initializes **local-TP** storage (``model.init(key, tp)``
+returns each shard's slice) and FSDP slicing happens inside the mapped
+function (``models.common.apply_fsdp_sharding``).  This module is the single
+place that turns a parameter *path* into the global layout those two steps
+imply — the specs handed to ``shard_map``'s ``in_specs``/``out_specs`` and
+to the checkpoint/dry-run layers.
+
+Rules are keyed on the leaf name (the path's last segment), mirroring the
+Megatron conventions the layers implement:
+
+=============  ====================================  =================
+leaf           storage (per layer)                   TP-sharded dim
+=============  ====================================  =================
+``wq``         (d_model, heads_local*hd)             1 (column)
+``wk``/``wv``  (d_model, kv_local*hd)                1 iff KV sharded
+``wo``         (heads_local*hd | d_inner_l, d)       0 (row)
+``w_up/gate``  mlp (d, d_ff/tp) / moe (e/tp, d, f)   1 / 0 (experts)
+``w_down``     mlp (d_ff/tp, d) / moe (e/tp, f, d)   0 / 0 (experts)
+``embed/table``(vocab/tp, d)                         0 (vocab rows)
+``unembed/w``  (d, vocab/tp)                         1 (vocab cols)
+``wx/wz/w_dt`` (d, d_inner_l | heads_l)              1 (column)
+``w_bc``       (d, 2N) single-group                  replicated
+``conv_x``     (W, d_inner_l)                        1
+``conv_bc``    (W, 2N)                               replicated
+``norm``       SSD gated norm (d_inner_l,)           0
+``a_log`` ...  per-head scalars (heads_l,)           0
+``ln*``, router, adapter, gates                      replicated
+=============  ====================================  =================
+
+FSDP placement reuses :func:`repro.models.common.fsdp_participates` /
+``fsdp_shard_dim`` — the *same* predicate the init-time slicing uses, so
+spec and storage cannot disagree.  A dim carrying both TP and FSDP (e.g.
+``wo`` row dim) gets a major-to-minor tuple ``(model, *fsdp_axes)``,
+matching init-slices-by-tp-then-fsdp storage order.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.collectives import AxisCtx
+
+#: leaf-name -> per-layer TP dim for 2-D projections (None = replicated).
+_TP_2D = {
+    "wq": 1, "wo": 0,
+    "w_up": 1, "w_gate": 1, "w_down": 0,
+    "wx": 1, "wz": 1, "w_dt": 1,
+    "conv_x": 1,
+    "table": 0, "w": 1,
+}
+
+#: leaf names sharded over the expert dim when 3-D (MoE expert stacks).
+_TP_EXPERT = ("w_up", "w_gate", "w_down")
+
+#: 1-D per-head/per-channel leaves that are TP-local.
+_TP_1D = ("norm", "a_log", "dt_bias", "d_skip")
+
+
+def _basename(path: str) -> str:
+    return path.rsplit("/", 1)[-1]
+
+
+def tp_dim(path: str, ndim: int, kv: bool = True) -> int | None:
+    """Tensor-parallel sharded dim of a parameter, in per-layer coordinates
+    (any scanned-stack dim already stripped), or None if replicated.
+
+    ``kv``: whether KV heads are sharded on this launch (``n_kv % tp == 0``);
+    when False, ``wk``/``wv`` are fully replicated per shard.
+    """
+    base = _basename(path)
+    if base in ("wk", "wv"):
+        return 1 if kv else None
+    if ndim == 3 and base in _TP_EXPERT:
+        return 0                       # MoE expert stacks: shard experts
+    if ndim == 1:
+        return 0 if base in _TP_1D else None
+    return _TP_2D.get(base)
+
+
+def _kv_sharded(path: str, per_layer_shape: tuple[int, ...], cfg) -> bool:
+    """Infer from storage whether KV heads were sharded at init: a replicated
+    KV projection stores the *full* ``n_kv * head_dim`` output dim."""
+    if _basename(path) not in ("wk", "wv") or not cfg.n_kv_heads:
+        return True
+    return per_layer_shape[-1] != cfg.n_kv_heads * cfg.resolved_head_dim
+
+
+def _entry(names: tuple[str, ...] | None):
+    if not names:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def _leaf_spec(path: str, arr, cfg, axes: AxisCtx, fsdp: int) -> P:
+    from repro.models.common import fsdp_participates, fsdp_shard_dim, is_stacked
+
+    off = 1 if (is_stacked(path) and arr.ndim >= 1) else 0
+    nd = arr.ndim - off
+    per_shape = tuple(arr.shape[off:])
+    entries: list[tuple[str, ...] | None] = [None] * arr.ndim
+
+    td = tp_dim(path, nd, _kv_sharded(path, per_shape, cfg))
+    if td is not None and axes.model_axis is not None:
+        entries[td + off] = (axes.model_axis,)
+
+    if fsdp > 1 and axes.fsdp_axes and fsdp_participates(path, per_shape, fsdp):
+        fd = fsdp_shard_dim(path, nd) + off
+        entries[fd] = (entries[fd] or ()) + tuple(axes.fsdp_axes)
+
+    return P(*[_entry(e) for e in entries])
+
+
+def tree_param_specs(shapes, cfg, axes: AxisCtx, fsdp: int):
+    """PartitionSpec tree matching a (local-storage) parameter tree.
+
+    ``shapes``: pytree of arrays / ShapeDtypeStructs / QTensors holding the
+    per-shard storage layout (TP applied at init; FSDP slicing may or may
+    not have been applied — the rules only read sharding-invariant dims).
+    ``fsdp``: total FSDP way-count of the launch (static).
+    """
+    from repro.models.common import QTensor, tree_paths_leaves
+
+    paths, leaves, treedef = tree_paths_leaves(shapes)
+    out = []
+    for path, leaf in zip(paths, leaves):
+        if isinstance(leaf, QTensor):
+            out.append(QTensor(
+                codes=_leaf_spec(path, leaf.codes, cfg, axes, fsdp),
+                scale=P(*([None] * leaf.scale.ndim))))
+        else:
+            out.append(_leaf_spec(path, leaf, cfg, axes, fsdp))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache layouts
+# ---------------------------------------------------------------------------
+
+
+def _batch_entry(axes: AxisCtx):
+    ba = tuple(axes.batch_axes)
+    if not ba:
+        return None
+    return ba if len(ba) > 1 else ba[0]
+
+
+def batch_specs(batch_tree, axes: AxisCtx):
+    """Shard every batch leaf's leading (global-batch) dim over the batch
+    axes; all other dims replicated."""
+    lead = _batch_entry(axes)
+
+    def one(leaf):
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_specs(caches, axes: AxisCtx, cfg):
+    """PartitionSpecs for decode caches (layer-stacked, batch-local storage).
+
+    Self-attention KV caches follow :func:`repro.models.attention.
+    kv_cache_seq_parallel`: KV-sharded launches split the KV-head dim over
+    the model axis; KV-replicated launches split the *sequence* dim instead
+    (each TP shard owns a slice of the context).  SSM caches split heads /
+    channels.  Cross-attention K/V (full-memory, per shard) split the KV
+    head dim only when KV is sharded.
+    """
+    from repro.models.attention import KVCache
+    from repro.models.ssm import SSMCache
+
+    model = axes.model_axis
+    lead = _batch_entry(axes)
+
+    def kv_sharded(n_kv_local: int) -> bool:
+        return bool(cfg.n_kv_heads) and n_kv_local != cfg.n_kv_heads
+
+    def self_kv(arr):                       # (L, B, S_local, KV_local, hd)
+        if kv_sharded(arr.shape[3]):
+            return P(None, lead, None, model, None)
+        return P(None, lead, model, None, None)   # sequence-parallel cache
+
+    def one(c):
+        if isinstance(c, KVCache):
+            return KVCache(k=self_kv(c.k), v=self_kv(c.v), length=P(None))
+        if isinstance(c, SSMCache):
+            return SSMCache(
+                state=P(None, lead, model, None, None),   # (L,B,H_l,N,P)
+                conv_x=P(None, lead, None, model),        # (L,B,W-1,d_in_l)
+                conv_bc=P(None, lead, None, None))        # (L,B,W-1,2N)
+        if c.ndim == 5:                      # cross K/V: (L,B,S_mem,KV_l,hd)
+            if kv_sharded(c.shape[3]):
+                return P(None, lead, None, model, None)
+            return P(None, lead, None, None, None)
+        return P(*((None,) if c.ndim == 1 else (None, lead) +
+                   (None,) * (c.ndim - 2)))
+
+    return jax.tree_util.tree_map(
+        one, caches, is_leaf=lambda x: isinstance(x, (KVCache, SSMCache)))

@@ -162,8 +162,19 @@ def parse_module(text: str) -> ModuleCosts:
                     if mm:
                         edges.append((mm.group(1), 1))
             elif op in COLLECTIVE_KINDS:
+                # Wire bytes derive from the RESULT type, which sits left of
+                # the opcode ("%x = f32[64,32] all-gather(f32[16,32] %p)...");
+                # shapes right of it are inline operand types / metadata and
+                # must not be counted.  ``*-start`` forms return a tuple
+                # (operands..., results..., context...): drop scalar context
+                # slots (u32[] handles), then keep the result half.
+                res = _SHAPE_RE.findall(line[: mo.start()])
                 if not res:
                     continue
+                if mo.group(0).endswith("-start("):
+                    res = [r for r in res if r[1]]      # drop scalar context
+                    if len(res) >= 2:
+                        res = res[len(res) // 2:]
                 out_b = sum(_shape_bytes(d, dims)[0] for d, dims in res)
                 mg = _GROUP_RE.search(line)
                 if mg:

@@ -1,0 +1,92 @@
+"""Minimal stand-in for the ``hypothesis`` API surface these tests use.
+
+The container has no ``hypothesis`` wheel and the suite must stay
+dependency-light, so ``conftest.py`` installs this module into
+``sys.modules['hypothesis']`` only when the real package is unavailable.
+It covers exactly what the tests use — ``@given`` with keyword strategies,
+``@settings(max_examples=..., deadline=...)``, ``st.integers`` and
+``st.sampled_from`` — by running each test on a fixed number of
+deterministically drawn examples (seeded per test name, so failures
+reproduce).  No shrinking, no database: a bounded random sweep, which is
+the property being relied on here.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_for(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options):
+        seq = list(options)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.example_for(rng) for s in strats))
+
+    @staticmethod
+    def lists(strat, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            strat.example_for(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+
+def given(**kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"shim:{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = {k: s.example_for(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest introspects the signature for fixtures: hide the drawn
+        # params (and the __wrapped__ chain functools.wraps leaves behind).
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__
+        wrapper._shim_given = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+st = strategies
+__all__ = ["given", "settings", "strategies", "st"]

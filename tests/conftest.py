@@ -1,0 +1,24 @@
+"""Test-session bootstrap.
+
+* Ensures ``src`` is importable even when the suite is invoked without
+  ``PYTHONPATH=src`` (e.g. straight ``pytest`` from the repo root) and the
+  package is not pip-installed.
+* Provides a deterministic fallback for ``hypothesis`` (not shipped in the
+  hermetic container): the property tests then run a bounded seeded sweep
+  via :mod:`tests._hypothesis_shim` instead of erroring at collection.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_shim
+
+    sys.modules["hypothesis"] = _hypothesis_shim

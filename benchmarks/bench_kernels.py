@@ -26,6 +26,20 @@ def main():
     flops = 2 * 256 * 2048 * 1024
     emit("kernel_quant_matmul_256x2048x1024", us, f"GFLOPs={flops/us/1e3:.2f}")
 
+    # decode-shaped: a handful of rows (adaptive bm keeps the grid tight)
+    xd = jax.random.normal(key, (4, 2048), jnp.float32)
+    us, _ = timed(lambda: jax.block_until_ready(ops.quant_matmul(xd, codes, scale)),
+                  repeats=3)
+    emit("kernel_quant_matmul_decode_4x2048x1024", us,
+         f"GBps_weights={codes.nbytes/us/1e3:.2f}")
+
+    # ragged / non-128-aligned (padding + masking path)
+    xr = jax.random.normal(key, (300, 700), jnp.float32)
+    cr = jax.random.randint(key, (700, 200), -127, 128, jnp.int8)
+    us, _ = timed(lambda: jax.block_until_ready(ops.quant_matmul(xr, cr, scale)),
+                  repeats=3)
+    emit("kernel_quant_matmul_ragged_300x700x200", us, "non_aligned=True")
+
     q = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32)
     us, _ = timed(lambda: jax.block_until_ready(ops.flash_attention(q, q, q)),
                   repeats=2)

@@ -1,27 +1,44 @@
-"""§Perf serving ladder table from results/hillclimb.json (regenerable via
-repro.launch.dryrun --serve-bits etc.; see EXPERIMENTS.md §Perf)."""
+"""Serving-path benchmark: drives the continuous-batching decode driver
+directly (smoke arch, N steps) for the f32 baseline and the packed int8
+fast path, and emits tok/s, weight bytes/step, and the packed-vs-f32 ratio.
+
+Off-TPU the kernels run in interpret mode, so the tok/s numbers validate
+plumbing and the byte ratios are exact storage facts; real rates need a TPU.
+Regenerate the full §Perf serving ladder with ``repro.launch.serve`` over
+archs x bit-widths (see EXPERIMENTS.md §Perf).
+"""
 
 from __future__ import annotations
 
-import json
-import os
-
 from benchmarks.common import emit
+
+ARCH = "yi-6b"
+STEPS = 12
+BATCH = 2
+S_MAX = 32
+PROMPT = 8
 
 
 def main():
-    path = "results/hillclimb.json"
-    if not os.path.exists(path):
-        emit("perf_ladder_missing", 0.0, "run the §Perf ladder first")
-        return []
-    rows = [r for r in json.load(open(path)) if r.get("status") == "ok"]
-    for r in rows:
-        v = r.get("variant") or {}
-        tag = "+".join(f"{k}={vv}" for k, vv in v.items()) or "baseline"
-        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
-        emit(f"perf_{r['arch']}_{r['shape']}_{tag}", step * 1e6,
-             f"compute={r['compute_s']:.2e};mem={r['memory_s']:.2e};"
-             f"coll={r['collective_s']:.2e};useful={r['useful_flops_ratio']:.3f}")
+    from repro.launch.serve import run_serve
+
+    rows = {}
+    for bits, tag in ((32, "f32"), (7, "int8")):
+        stats = run_serve(ARCH, smoke=True, steps=STEPS, batch=BATCH,
+                          s_max=S_MAX, prompt_len=PROMPT, serve_bits=bits,
+                          attn_impl="ref", quiet=True)
+        rows[tag] = stats
+        us_per_step = stats.wall_s / max(stats.decode_steps, 1) * 1e6
+        emit(f"serving_{ARCH}_smoke_{tag}", us_per_step,
+             f"tok_s={stats.tok_s:.1f};bytes_step={stats.bytes_per_step_packed};"
+             f"completed={stats.completed};admitted={stats.admitted}")
+    ratio = (rows["int8"].bytes_per_step_packed
+             / max(rows["f32"].bytes_per_step_f32, 1))
+    emit(f"serving_{ARCH}_smoke_packed_vs_f32", ratio * 100.0,
+         f"packed_bytes={rows['int8'].bytes_per_step_packed};"
+         f"f32_bytes={rows['f32'].bytes_per_step_f32}")
+    assert ratio < 1 / 3, (
+        f"int8 serving path must stream < 1/3 the f32 weight bytes, got {ratio:.3f}")
     return rows
 
 

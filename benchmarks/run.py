@@ -22,7 +22,7 @@ SECTIONS = {
     "bound": ("benchmarks.bench_bound", {}),
     "kernels": ("benchmarks.bench_kernels", {}),
     "roofline": ("benchmarks.bench_roofline", {}),
-    "perf_ladder": ("benchmarks.bench_serving", {}),
+    "serving": ("benchmarks.bench_serving", {}),
 }
 
 

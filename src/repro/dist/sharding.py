@@ -184,7 +184,9 @@ def cache_specs(caches, axes: AxisCtx, cfg):
 
     def one(c):
         if isinstance(c, KVCache):
-            return KVCache(k=self_kv(c.k), v=self_kv(c.v), length=P(None))
+            # per-sequence lengths: (L, B) — batch-local like the K/V slabs
+            return KVCache(k=self_kv(c.k), v=self_kv(c.v),
+                           length=P(None, lead))
         if isinstance(c, SSMCache):
             return SSMCache(
                 state=P(None, lead, model, None, None),   # (L,B,H_l,N,P)

@@ -24,7 +24,8 @@ _NEG_INF = -1e30
 
 
 def _body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-          *, scale: float, block_q: int, block_k: int, n_k: int, causal: bool):
+          *, scale: float, block_q: int, block_k: int, n_k: int, causal: bool,
+          s_valid: int):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
 
@@ -34,8 +35,11 @@ def _body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # causal skip: this k-block starts after the last query of the q-block
-    run = (not causal) or (ik * block_k <= iq * block_q + block_q - 1)
+    # causal skip: this k-block starts after the last query of the q-block.
+    # Blocks entirely past the valid (unpadded) key range are skipped too.
+    run = ik * block_k < s_valid
+    if causal:
+        run = jnp.logical_and(run, ik * block_k <= iq * block_q + block_q - 1)
 
     @pl.when(run)
     def _compute():
@@ -44,10 +48,13 @@ def _body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         v = v_ref[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (bq, bk)
+        cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         if causal:
             rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-            cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
             s = jnp.where(cols <= rows, s, _NEG_INF)
+        if s_valid % block_k:
+            # ragged sequence: mask the zero-padded tail keys
+            s = jnp.where(cols < s_valid, s, _NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -64,8 +71,14 @@ def _body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 def flash_attention_kernel(q, k, v, *, causal: bool = True,
-                           blocks=DEFAULT_BLOCKS, interpret=False):
-    """q, k, v: (BH, S, D) — batch*heads flattened.  Returns (BH, S, D)."""
+                           blocks=DEFAULT_BLOCKS, interpret=False,
+                           s_valid: int | None = None):
+    """q, k, v: (BH, S, D) — batch*heads flattened.  Returns (BH, S, D).
+
+    ``s_valid``: true sequence length when the inputs were zero-padded to a
+    block multiple; padded keys are masked inside the kernel (padded query
+    rows produce garbage the caller slices off).
+    """
     BH, S, D = q.shape
     bq, bk = blocks
     bq, bk = min(bq, S), min(bk, S)
@@ -73,7 +86,8 @@ def flash_attention_kernel(q, k, v, *, causal: bool = True,
     scale = D ** -0.5
     return pl.pallas_call(
         functools.partial(_body, scale=scale, block_q=bq, block_k=bk,
-                          n_k=grid[2], causal=causal),
+                          n_k=grid[2], causal=causal,
+                          s_valid=S if s_valid is None else s_valid),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),

@@ -1,8 +1,15 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""Jitted public wrappers + leaf-type dispatch for the Pallas kernels.
 
 Dispatch policy: real TPU lowering on TPU backends; ``interpret=True``
 (Python-emulated, correctness-checked) elsewhere.  The wrappers also handle
-padding to block multiples and the scalar plumbing the kernels expect.
+padding to block multiples (ragged / non-128-aligned shapes included) and the
+scalar plumbing the kernels expect.
+
+:func:`dense_dispatch` is the serving fast path's single entry point: given an
+activation and either a plain array or a :class:`~repro.models.common.QTensor`
+weight, it routes to the int8-streaming ``quant_matmul`` kernel when the
+weight is packed, so dequantization happens tile-by-tile in VMEM instead of
+materializing a full-precision copy in HBM.
 """
 
 from __future__ import annotations
@@ -20,6 +27,10 @@ from repro.kernels.sr_quant import sr_quant_fake_kernel, sr_quant_pack_kernel
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
 def _pad2(x, bm, bn, value=0):
@@ -64,27 +75,89 @@ def sr_pack_fused(w: jnp.ndarray, key: jax.Array, bits: int = 7):
 
 @jax.jit
 def quant_matmul(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray):
-    """x (M,K) @ dequant(codes (K,N) int8, scale) with int8 HBM streaming."""
+    """x (M,K) @ dequant(codes (K,N) int8/int16, scale) with packed HBM
+    streaming.
+
+    Block sizes adapt to the problem: decode-sized M (a handful of rows)
+    gets an 8/16-row block instead of padding the batch to 256, and ragged
+    (non-128-aligned) K/N are zero-padded to the block grid — zero codes
+    contribute nothing to the dot, so no masking is needed.
+    """
     M, K = x.shape
     _, N = codes.shape
-    bm, bn, bk = 256, 256, 512
+    # sublane minima: 8 for f32 x-blocks, 16 for bf16; 128-lane alignment on
+    # the contraction/output dims (see pallas_guide §Tiling Constraints).
+    bm = min(256, _round_up(M, 8 if x.dtype == jnp.float32 else 16))
+    bn = min(256, _round_up(N, 128))
+    bk = min(512, _round_up(K, 128))
     xp = _pad2(x, bm, bk)
     cp = _pad2(codes, bk, bn)
     out = quant_matmul_kernel(xp, cp, scale.reshape(1, 1),
-                              interpret=_interpret())
+                              blocks=(bm, bn, bk), interpret=_interpret())
     return out[:M, :N]
 
 
 @functools.partial(jax.jit, static_argnames=("causal",))
 def flash_attention(q, k, v, causal: bool = True):
-    """q,k,v: (B, H, S, D) -> (B, H, S, D); online-softmax Pallas kernel."""
+    """q,k,v: (B, H, S, D) -> (B, H, S, D); online-softmax Pallas kernel.
+
+    Ragged S (not a multiple of the 128-aligned block) is zero-padded; the
+    kernel masks the padded keys via ``s_valid`` and the padded query rows
+    are sliced off here.
+    """
     B, H, S, D = q.shape
-    qf = q.reshape(B * H, S, D)
-    kf = k.reshape(B * H, S, D)
-    vf = v.reshape(B * H, S, D)
-    out = flash_attention_kernel(qf, kf, vf, causal=causal,
+    bq = bk = min(256, _round_up(S, 128))
+    Sp = _round_up(S, bq)
+
+    def flat(t):
+        t = t.reshape(B * H, S, D)
+        if Sp != S:
+            t = jnp.pad(t, ((0, 0), (0, Sp - S), (0, 0)))
+        return t
+
+    out = flash_attention_kernel(flat(q), flat(k), flat(v), causal=causal,
+                                 blocks=(bq, bk), s_valid=S,
                                  interpret=_interpret())
-    return out.reshape(B, H, S, D)
+    return out[:, :S, :].reshape(B, H, S, D)
+
+
+# ---------------------------------------------------------------------------
+# Leaf-type dispatch (the serving fast path)
+# ---------------------------------------------------------------------------
+
+
+def _is_qtensor(w) -> bool:
+    # structural check instead of an import: repro.models.common imports are
+    # kept out of module scope so `repro.kernels` stays importable standalone.
+    return hasattr(w, "codes") and hasattr(w, "scale")
+
+
+def dense_dispatch(x: jnp.ndarray, w) -> jnp.ndarray:
+    """``x (..., K) @ w`` where ``w`` is a plain ``(K, N)`` array *or* a
+    packed :class:`~repro.models.common.QTensor`.
+
+    Packed weights take the ``quant_matmul`` Pallas kernel: codes stream from
+    HBM as int8/int16 and dequantize tile-by-tile in VMEM (f32 accumulate),
+    so a decode step moves ~1/4 the weight bytes of the f32 path.  The
+    result is cast back to ``x.dtype`` to match the eager-dequant reference.
+    """
+    if _is_qtensor(w):
+        lead = x.shape[:-1]
+        out = quant_matmul(x.reshape((-1, x.shape[-1])), w.codes, w.scale)
+        return out.reshape(lead + (w.codes.shape[-1],)).astype(x.dtype)
+    return x @ w
+
+
+def as_array(w, dtype=jnp.float32) -> jnp.ndarray:
+    """Materialize a (possibly packed) weight as a dense array.
+
+    Fallback for consumers the kernel cannot serve — embedding gathers and
+    the batched MoE expert einsums — under lazy-quant mode.
+    """
+    if _is_qtensor(w):
+        return (w.codes.astype(jnp.float32) * w.scale.astype(jnp.float32)
+                ).astype(dtype)
+    return w
 
 
 # Re-export the oracles for convenience in tests/benchmarks.

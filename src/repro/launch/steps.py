@@ -224,9 +224,28 @@ class ServeStep:
     caches_shape: Any = None
 
 
+def _greedy_pick(axes: AxisCtx, tp: int, vl: int, logits):
+    """Greedy token over vocab-parallel local logits (B, 1, V/tp) -> (B, 1)."""
+    lg = logits[:, -1, :].astype(jnp.float32)
+    mloc = jnp.max(lg, axis=-1)
+    iloc = jnp.argmax(lg, axis=-1).astype(jnp.int32) + axes.tp_index() * vl
+    if axes.model_axis and tp > 1:
+        mglob = jax.lax.pmax(mloc, axes.model_axis)
+        cand = jnp.where(mloc >= mglob, iloc, jnp.int32(2**30))
+        nxt = jax.lax.pmin(cand, axes.model_axis)
+    else:
+        nxt = iloc
+    return nxt[:, None]
+
+
 def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
-                      params_tree=None, s_max: int, batch_global: int):
-    """One-token decode step (greedy sampling over vocab-parallel logits)."""
+                      params_tree=None, s_max: int, batch_global: int,
+                      lazy_quant: bool = False):
+    """One-token decode step (greedy sampling over vocab-parallel logits).
+
+    ``lazy_quant``: packed ``QTensor`` weights stay int8 through the matmuls
+    (quant_matmul kernel dispatch) instead of being dequantized on use.
+    """
     cfg = model.cfg
     tp = _size(mesh, axes.model_axis)
     fsdp = _fsdp_size(mesh, axes)
@@ -234,18 +253,10 @@ def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
     vl = padded_vocab_local(cfg, tp)
 
     def local_decode(params, batch, caches):
-        pc = ParamCtx(ctx=axes, transform=None, compute_dtype=_compute_dtype(cfg))
+        pc = ParamCtx(ctx=axes, transform=None, compute_dtype=_compute_dtype(cfg),
+                      lazy_quant=lazy_quant)
         logits, new_caches = model.decode_step(pc, params, batch, caches)
-        lg = logits[:, -1, :].astype(jnp.float32)       # (B, V/tp)
-        mloc = jnp.max(lg, axis=-1)
-        iloc = jnp.argmax(lg, axis=-1).astype(jnp.int32) + pc.ctx.tp_index() * vl
-        if axes.model_axis and tp > 1:
-            mglob = jax.lax.pmax(mloc, axes.model_axis)
-            cand = jnp.where(mloc >= mglob, iloc, jnp.int32(2**30))
-            nxt = jax.lax.pmin(cand, axes.model_axis)
-        else:
-            nxt = iloc
-        return nxt[:, None], new_caches
+        return _greedy_pick(axes, tp, vl, logits), new_caches
 
     if params_tree is None:
         params_tree = jax.eval_shape(
@@ -274,6 +285,97 @@ def _batch_size(mesh, axes: AxisCtx):
     for a in axes.batch_axes:
         n *= _size(mesh, a)
     return n
+
+
+def init_global_caches(model: Model, mesh, axes: AxisCtx, *, s_max: int,
+                       batch_global: int, dtype=jnp.float32):
+    """Allocate the GLOBAL decode caches for a launch.
+
+    ``model.init_caches`` returns per-shard LOCAL shapes (what the mapped
+    function sees); the global arrays a jitted shard_map step consumes
+    multiply every sharded dim by its axis size — e.g. the sequence-parallel
+    KV cache stores S_max/tp per shard but S_max globally.  Passing the
+    local-shaped tree as the global array silently truncates the cache on
+    tp > 1 launches; always go through this helper (or ``globalize``).
+    """
+    tp = _size(mesh, axes.model_axis)
+    b_local = batch_global // max(_batch_size(mesh, axes), 1)
+    shapes = jax.eval_shape(
+        functools.partial(model.init_caches, b_local, s_max, tp, dtype=dtype))
+    specs = cache_specs(shapes, axes, model.cfg)
+    g = globalize(shapes, specs, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), g,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
+                         params_tree=None, s_max: int, s_prompt: int,
+                         batch_global: int, attn_impl: str = "auto",
+                         lazy_quant: bool = False, bos_id: int = 1):
+    """Prefill-into-slots step for continuous batching.
+
+    The jitted fn signature is ``(params, batch, caches, slot_mask) ->
+    (first_token (B, 1), merged_caches)``: it runs the model's real prefill
+    (parallel forward with K/V capture for attention families, recurrence
+    scan for SSM, encoder + cross-K/V fill for enc-dec/VLM) over a fresh
+    zeroed cache, then merges ONLY the slots selected by ``slot_mask`` into
+    the live caches — so new requests join a mid-flight batch without
+    disturbing the sequences still decoding in the other slots.
+
+    ``attn_impl="flash"`` routes the prompt self-attention through the
+    Pallas flash-attention kernel.
+    """
+    cfg = model.cfg
+    tp = _size(mesh, axes.model_axis)
+    fsdp = _fsdp_size(mesh, axes)
+    from repro.models.transformer import padded_vocab_local
+    vl = padded_vocab_local(cfg, tp)
+    b_local = batch_global // max(_batch_size(mesh, axes), 1)
+
+    def merge_slots(old, new, slot_mask):
+        def one(o, n):
+            # every cache leaf is layer-stacked (L, B_local, ...); lengths
+            # are (L, B_local)
+            assert o.ndim >= 2 and o.shape[1] == b_local, o.shape
+            m = slot_mask.reshape((1, -1) + (1,) * (o.ndim - 2))
+            return jnp.where(m, n, o)
+
+        return jax.tree_util.tree_map(one, old, new)
+
+    def local_prefill(params, batch, caches, slot_mask):
+        pc = ParamCtx(ctx=axes, transform=None, compute_dtype=_compute_dtype(cfg),
+                      lazy_quant=lazy_quant)
+        fresh = jax.tree_util.tree_map(jnp.zeros_like, caches)
+        logits, filled = model.prefill(pc, params, batch, fresh,
+                                       attn_impl=attn_impl)
+        if logits is None:      # enc-dec: decode starts from BOS
+            tok = jnp.full((b_local, 1), bos_id, jnp.int32)
+        else:
+            tok = _greedy_pick(axes, tp, vl, logits)
+        return tok, merge_slots(caches, filled, slot_mask)
+
+    if params_tree is None:
+        params_tree = jax.eval_shape(
+            lambda key: apply_fsdp_sharding(
+                model.init(key, tp), ParamCtx(ctx=axes), fsdp=fsdp),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    param_specs = tree_param_specs(params_tree, cfg, axes, fsdp)
+    caches_shape = jax.eval_shape(
+        functools.partial(model.init_caches, b_local, s_max, tp))
+    c_specs = cache_specs(caches_shape, axes, cfg)
+    bspec_tree = model.prefill_batch_spec(batch_global, s_prompt, s_max)
+    bspecs = batch_specs(bspec_tree, axes)
+    mask_spec = batch_specs(
+        {"m": jax.ShapeDtypeStruct((batch_global,), jnp.bool_)}, axes)["m"]
+    tok_spec = batch_specs(
+        {"token": jax.ShapeDtypeStruct((batch_global, 1), jnp.int32)},
+        axes)["token"]
+    sm = jax.shard_map(local_prefill, mesh=mesh,
+                       in_specs=(param_specs, bspecs, c_specs, mask_spec),
+                       out_specs=(tok_spec, c_specs), check_vma=False)
+    return ServeStep(fn=jax.jit(sm), param_specs=param_specs, cache_specs=c_specs,
+                     param_shapes=params_tree, caches_shape=caches_shape)
 
 
 def serving_axes(axes: AxisCtx, global_batch: int, mesh) -> AxisCtx:

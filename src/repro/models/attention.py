@@ -21,8 +21,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models.common import ParamCtx, init_dense
-from repro.models.layers import apply_rope, rope_tables, sp_out
+from repro.models.layers import apply_rope, dense, rope_tables, sp_out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,9 +71,9 @@ def init_attention(keys, dims: AttnDims, dtype=jnp.float32, cross: bool = False)
 
 def _project_qkv(pc: ParamCtx, path, p, x, x_kv, dims: AttnDims, q_pos, kv_pos):
     B = x.shape[0]
-    q = (x @ pc.use(f"{path}/wq", p["wq"])).reshape(B, -1, dims.heads_local, dims.head_dim)
-    k = (x_kv @ pc.use(f"{path}/wk", p["wk"])).reshape(B, -1, dims.kv_local, dims.head_dim)
-    v = (x_kv @ pc.use(f"{path}/wv", p["wv"])).reshape(B, -1, dims.kv_local, dims.head_dim)
+    q = dense(pc, f"{path}/wq", p["wq"], x).reshape(B, -1, dims.heads_local, dims.head_dim)
+    k = dense(pc, f"{path}/wk", p["wk"], x_kv).reshape(B, -1, dims.kv_local, dims.head_dim)
+    v = dense(pc, f"{path}/wv", p["wv"], x_kv).reshape(B, -1, dims.kv_local, dims.head_dim)
     if q_pos is not None:  # rope (self-attention only)
         cq, sq = rope_tables(q_pos, dims.head_dim, dims.rope_theta)
         ck, sk = rope_tables(kv_pos, dims.head_dim, dims.rope_theta)
@@ -147,7 +148,12 @@ def _chunked_attention(q, k, v, causal: bool, chunk_kv: int):
 
 def self_attention(pc: ParamCtx, path: str, p, x, dims: AttnDims,
                    *, impl: str = "auto"):
-    """Training/prefill self-attention.  Returns (y, (k, v)) with local KV."""
+    """Training/prefill self-attention.  Returns (y, (k, v)) with local KV.
+
+    ``impl``: ``full`` (materialized scores), ``chunked`` (online-softmax in
+    jnp), ``flash`` (Pallas online-softmax kernel — the prefill fast path),
+    or ``auto``.
+    """
     S = x.shape[1]
     pos = jnp.arange(S)
     q, k, v = _project_qkv(pc, path, p, x, x, dims, pos, pos)
@@ -155,13 +161,19 @@ def self_attention(pc: ParamCtx, path: str, p, x, dims: AttnDims,
     ke, ve = _expand_kv(k, dims, tp_idx), _expand_kv(v, dims, tp_idx)
     if impl == "auto":
         impl = "chunked" if S > 4096 else "full"
-    if impl == "chunked":
+    if impl == "flash":
+        # (B,S,H,hd) -> kernel layout (B,H,S,hd) and back
+        yt = ops.flash_attention(
+            jnp.transpose(q, (0, 2, 1, 3)), jnp.transpose(ke, (0, 2, 1, 3)),
+            jnp.transpose(ve, (0, 2, 1, 3)), causal=dims.causal)
+        y = jnp.transpose(yt, (0, 2, 1, 3))
+    elif impl == "chunked":
         y = _chunked_attention(q, ke, ve, dims.causal, min(dims.chunk_kv, S))
     else:
         y = _full_attention(q, ke, ve, dims.causal)
     B = x.shape[0]
     y = y.reshape(B, S, dims.heads_local * dims.head_dim)
-    out = y @ pc.use(f"{path}/wo", p["wo"])
+    out = dense(pc, f"{path}/wo", p["wo"], y)
     return sp_out(pc, out), (k, v)
 
 
@@ -173,9 +185,9 @@ def project_cross_kv(pc: ParamCtx, path: str, p, memory, dims: AttnDims):
     (EXPERIMENTS.md §Perf cell 3).
     """
     B = memory.shape[0]
-    k = (memory @ pc.use(f"{path}/wk", p["wk"])).reshape(
+    k = dense(pc, f"{path}/wk", p["wk"], memory).reshape(
         B, -1, dims.kv_local, dims.head_dim)
-    v = (memory @ pc.use(f"{path}/wv", p["wv"])).reshape(
+    v = dense(pc, f"{path}/wv", p["wv"], memory).reshape(
         B, -1, dims.kv_local, dims.head_dim)
     return k, v
 
@@ -183,7 +195,7 @@ def project_cross_kv(pc: ParamCtx, path: str, p, memory, dims: AttnDims):
 def cross_attention_cached(pc: ParamCtx, path: str, p, x, k, v, dims: AttnDims):
     """Decode-path cross-attention against precomputed K/V."""
     B = x.shape[0]
-    q = (x @ pc.use(f"{path}/wq", p["wq"])).reshape(
+    q = dense(pc, f"{path}/wq", p["wq"], x).reshape(
         B, -1, dims.heads_local, dims.head_dim)
     tp_idx = pc.ctx.tp_index()
     y = _full_attention(q, _expand_kv(k.astype(q.dtype), dims, tp_idx),
@@ -191,7 +203,7 @@ def cross_attention_cached(pc: ParamCtx, path: str, p, x, k, v, dims: AttnDims):
                         causal=False)
     S = x.shape[1]
     y = y.reshape(B, S, dims.heads_local * dims.head_dim)
-    return pc.ctx.psum_model(y @ pc.use(f"{path}/wo", p["wo"]))
+    return pc.ctx.psum_model(dense(pc, f"{path}/wo", p["wo"], y))
 
 
 def cross_attention(pc: ParamCtx, path: str, p, x, memory, dims: AttnDims):
@@ -202,13 +214,15 @@ def cross_attention(pc: ParamCtx, path: str, p, x, memory, dims: AttnDims):
                         causal=False)
     B, S = x.shape[0], x.shape[1]
     y = y.reshape(B, S, dims.heads_local * dims.head_dim)
-    return sp_out(pc, y @ pc.use(f"{path}/wo", p["wo"]))
+    return sp_out(pc, dense(pc, f"{path}/wo", p["wo"], y))
 
 
 class KVCache(NamedTuple):
     k: jnp.ndarray          # (B, S_local, KVl, hd)
     v: jnp.ndarray
-    length: jnp.ndarray     # scalar int32: tokens already cached (global)
+    length: jnp.ndarray     # (B,) int32: tokens already cached, per sequence
+                            # (continuous batching admits/evicts mid-flight,
+                            # so every slot carries its own clock)
 
 
 def kv_cache_seq_parallel(dims: AttnDims) -> bool:
@@ -223,12 +237,34 @@ def init_kv_cache(batch: int, s_max: int, dims: AttnDims, dtype=jnp.bfloat16):
     s_local = s_max // dims.tp if kv_cache_seq_parallel(dims) else s_max
     shape = (batch, s_local, dims.kv_local, dims.head_dim)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
-                   jnp.zeros((), jnp.int32))
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def prefill_kv_cache(pc: ParamCtx, cache: KVCache, k, v,
+                     dims: AttnDims) -> KVCache:
+    """Write a full prompt's K/V (B, S_p, KVl, hd) into a fresh cache.
+
+    Works for both cache layouts: each shard keeps the slice of the prompt
+    that falls in its global-position range (the whole prompt when the cache
+    is not sequence-parallel).  Lengths are set to S_p for every sequence.
+    """
+    S_loc, S_p = cache.k.shape[1], k.shape[1]
+    base = (pc.ctx.tp_index() * S_loc) if kv_cache_seq_parallel(dims) else 0
+    gpos = base + jnp.arange(S_loc)
+    idx = jnp.clip(gpos, 0, S_p - 1)
+    sel = (gpos < S_p)[None, :, None, None]
+    knew = jnp.where(sel, jnp.take(k.astype(cache.k.dtype), idx, axis=1), cache.k)
+    vnew = jnp.where(sel, jnp.take(v.astype(cache.v.dtype), idx, axis=1), cache.v)
+    return KVCache(knew, vnew, jnp.full((k.shape[0],), S_p, jnp.int32))
 
 
 def decode_self_attention(pc: ParamCtx, path: str, p, x, cache: KVCache,
                           dims: AttnDims):
     """One-token decode: x (B, 1, D); returns (y, new_cache).
+
+    Per-sequence lengths: slot b's new token writes at ``length[b]`` and
+    attends to positions ``<= length[b]`` — sequences admitted at different
+    times (continuous batching) coexist in one step.
 
     Two cache layouts:
     * kv-sharded (n_kv % tp == 0): cache (B, S_max, KV/tp, hd) — classic.
@@ -237,23 +273,20 @@ def decode_self_attention(pc: ParamCtx, path: str, p, x, cache: KVCache,
       distributed online-softmax (pmax + psum) across the model axis.
     """
     seqpar = kv_cache_seq_parallel(dims)
-    pos = cache.length[None]
+    pos = cache.length[:, None]                      # (B, 1) per-seq positions
     q, k, v = _project_qkv(pc, path, p, x, x, dims, pos, pos)
     S_loc = cache.k.shape[1]
     scale = dims.head_dim ** -0.5
 
     if seqpar:
-        # --- write: only the shard owning global position `length` stores ---
+        # --- write: only the shard owning global position `length[b]` stores
         tp_idx = pc.ctx.tp_index()
-        owner = cache.length // S_loc
+        owner = cache.length // S_loc                               # (B,)
         local_pos = cache.length - owner * S_loc
-        upd_k = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, k.astype(cache.k.dtype), local_pos, axis=1)
-        upd_v = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, v.astype(cache.v.dtype), local_pos, axis=1)
-        mine = owner == tp_idx
-        knew = jnp.where(mine, upd_k, cache.k)
-        vnew = jnp.where(mine, upd_v, cache.v)
+        wmask = ((jnp.arange(S_loc)[None, :] == local_pos[:, None])
+                 & (owner == tp_idx)[:, None])                      # (B,S)
+        knew = jnp.where(wmask[:, :, None, None], k.astype(cache.k.dtype), cache.k)
+        vnew = jnp.where(wmask[:, :, None, None], v.astype(cache.v.dtype), cache.v)
         # --- partial attention over the local slice ------------------------
         # Every shard needs ALL q heads against its slice: gather q (one
         # token — bytes are negligible next to the cache stream).
@@ -262,7 +295,8 @@ def decode_self_attention(pc: ParamCtx, path: str, p, x, cache: KVCache,
         ve = _expand_kv(vnew.astype(q.dtype), dims)
         s = jnp.einsum("bqhd,bkhd->bhqk", qg, ke).astype(jnp.float32) * scale
         gpos = tp_idx * S_loc + jnp.arange(S_loc)
-        s = jnp.where(gpos[None, None, None, :] <= cache.length, s, -1e30)
+        gmask = gpos[None, :] <= cache.length[:, None]              # (B,S)
+        s = jnp.where(gmask[:, None, None, :], s, -1e30)
         ax = dims_model_axis(pc)
         m_loc = jnp.max(s, axis=-1)                                # (B,H,1)
         m_glob = jax.lax.pmax(m_loc, ax) if ax else m_loc
@@ -277,22 +311,21 @@ def decode_self_attention(pc: ParamCtx, path: str, p, x, cache: KVCache,
         hl = dims.heads_local
         y = jax.lax.dynamic_slice_in_dim(y, tp_idx * hl, hl, axis=2)
     else:
-        knew = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
-        vnew = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        wmask = (jnp.arange(S_loc)[None, :] == cache.length[:, None])  # (B,S)
+        knew = jnp.where(wmask[:, :, None, None], k.astype(cache.k.dtype), cache.k)
+        vnew = jnp.where(wmask[:, :, None, None], v.astype(cache.v.dtype), cache.v)
         tp_idx2 = pc.ctx.tp_index()
         ke = _expand_kv(knew.astype(q.dtype), dims, tp_idx2)
         ve = _expand_kv(vnew.astype(q.dtype), dims, tp_idx2)
         s = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * scale
-        mask = jnp.arange(S_loc)[None, None, None, :] <= cache.length
-        s = jnp.where(mask, s, -1e30)
+        att_mask = (jnp.arange(S_loc)[None, :] <= cache.length[:, None])
+        s = jnp.where(att_mask[:, None, None, :], s, -1e30)
         w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         y = jnp.einsum("bhqk,bkhd->bqhd", w, ve)
 
     B = x.shape[0]
     y = y.reshape(B, 1, dims.heads_local * dims.head_dim)
-    out = pc.ctx.psum_model(y @ pc.use(f"{path}/wo", p["wo"]))
+    out = pc.ctx.psum_model(dense(pc, f"{path}/wo", p["wo"], y))
     return out, KVCache(knew, vnew, cache.length + 1)
 
 

@@ -124,6 +124,13 @@ class ParamCtx:
 
     ``gather_dtype``: cast parameters to this dtype BEFORE the FSDP
     all-gather (e.g. bf16 halves gather bytes; §Perf knob).
+
+    ``lazy_quant``: serving fast path.  When True, ``use()`` on a
+    :class:`QTensor` returns the packed handle itself (codes gathered, NOT
+    dequantized); matmul call sites dispatch on leaf type via
+    :func:`repro.kernels.ops.dense_dispatch`, so dequantization happens
+    tile-by-tile inside the ``quant_matmul`` kernel and the weight stream
+    stays int8 all the way from HBM to VMEM.
     """
 
     ctx: AxisCtx
@@ -131,19 +138,26 @@ class ParamCtx:
     compute_dtype: Any = jnp.bfloat16
     sp: bool = False
     gather_dtype: Any = None
+    lazy_quant: bool = False
 
     def is_fsdp(self, path: str, w) -> bool:
         """w is the *stored local* leaf (per-layer view inside a scan)."""
         leaf = w.codes if isinstance(w, QTensor) else w
         return fsdp_participates(path, leaf.shape, self.ctx.fsdp)
 
-    def use(self, path: str, w, *, gathered_dim: int | None = None) -> jnp.ndarray:
-        """Gather + transform + cast: the single funnel every weight goes through."""
+    def use(self, path: str, w, *, gathered_dim: int | None = None):
+        """Gather + transform + cast: the single funnel every weight goes through.
+
+        Returns a dense array, or the packed :class:`QTensor` (codes gathered)
+        when ``lazy_quant`` is on — consumers dispatch on the leaf type.
+        """
         nd = (w.codes if isinstance(w, QTensor) else w).ndim
         dim = fsdp_shard_dim(path, nd) if gathered_dim is None else gathered_dim
         gather = self.is_fsdp(path, w)
         if isinstance(w, QTensor):
             codes = self.ctx.gather_fsdp(w.codes, axis=dim) if gather else w.codes
+            if self.lazy_quant and self.transform is None:
+                return QTensor(codes, w.scale)
             full = codes.astype(jnp.float32) * w.scale.astype(jnp.float32)
         else:
             full = w

@@ -60,7 +60,7 @@ def init_encdec(cfg: ModelConfig, key, tp: int, dtype=jnp.float32) -> dict:
 def encode(cfg: ModelConfig, pc: ParamCtx, params, frames, *, attn_impl="auto"):
     """frames: (B, S_src, d_frontend) stub embeddings -> memory (B,S_src,D)."""
     ad = attn_dims(cfg, tp=pc.ctx.tp, causal=False)
-    x = frames.astype(pc.compute_dtype) @ pc.use("adapter", params["adapter"])
+    x = L.dense(pc, "adapter", params["adapter"], frames.astype(pc.compute_dtype))
     x = L.sp_out(pc, x) if (pc.sp and pc.ctx.tp > 1) else x
 
     def layer(x, lp):
@@ -136,6 +136,18 @@ def fill_cross_caches(cfg: ModelConfig, pc, params, memory, caches):
     _, (ks, vs) = jax.lax.scan(body, (), params["decoder"])
     return {**caches, "cross_k": ks.astype(caches["cross_k"].dtype),
             "cross_v": vs.astype(caches["cross_v"].dtype)}
+
+
+def prefill(cfg: ModelConfig, pc: ParamCtx, params, frames, caches,
+            *, attn_impl="auto"):
+    """Real prefill: run the encoder over the source frames and fill the
+    cross-attention K/V caches.  Decoder self caches start empty (decode
+    begins from BOS), so ``None`` logits tell the driver to seed with BOS.
+
+    ``frames`` must span the cache's memory length (the driver pads to it).
+    """
+    memory = encode(cfg, pc, params, frames, attn_impl=attn_impl)
+    return None, fill_cross_caches(cfg, pc, params, memory, caches)
 
 
 def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):

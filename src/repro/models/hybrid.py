@@ -148,6 +148,22 @@ def init_hybrid_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
     return caches
 
 
+def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, caches,
+            *, attn_impl="auto"):
+    """Hybrid prefill: scan of decode steps over the prompt — the SSM
+    sublayers advance their constant-size state and the attention sublayers
+    fill their KV caches (per-sequence lengths end at S_p).
+    tokens: (B, S_p).  Returns (last-position local logits, caches)."""
+    del attn_impl  # decode path drives both mixer kinds
+
+    def step(caches, t):
+        logits, caches = decode_step(cfg, pc, params, t[:, None], caches)
+        return caches, logits
+
+    caches, logits = jax.lax.scan(step, caches, jnp.moveaxis(tokens, 1, 0))
+    return logits[-1], caches
+
+
 def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
     tp = pc.ctx.tp
     ad = attn_dims(cfg, tp)

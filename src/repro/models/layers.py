@@ -17,7 +17,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ParamCtx, init_dense, init_embed
+from repro.kernels.ops import as_array, dense_dispatch
+from repro.models.common import ParamCtx, QTensor, init_dense, init_embed
 
 
 # ---------------------------------------------------------------------------
@@ -94,16 +95,16 @@ def init_mlp(keys, d: int, d_ff_local: int, act: str, dtype=jnp.float32):
 
 def mlp(pc: ParamCtx, path: str, p, x, act: str):
     """Column-parallel up/gate, row-parallel down (+psum over model)."""
-    up = x @ pc.use(f"{path}/w_up", p["w_up"])
+    up = dense(pc, f"{path}/w_up", p["w_up"], x)
     if act == "swiglu":
-        gate = x @ pc.use(f"{path}/w_gate", p["w_gate"])
+        gate = dense(pc, f"{path}/w_gate", p["w_gate"], x)
         h = jax.nn.silu(gate) * up
     elif act == "geglu":
-        gate = x @ pc.use(f"{path}/w_gate", p["w_gate"])
+        gate = dense(pc, f"{path}/w_gate", p["w_gate"], x)
         h = jax.nn.gelu(gate, approximate=True) * up
     else:
         h = jax.nn.gelu(up, approximate=True)
-    y = h @ pc.use(f"{path}/w_down", p["w_down"])
+    y = dense(pc, f"{path}/w_down", p["w_down"], h)
     return sp_out(pc, y)
 
 
@@ -124,14 +125,19 @@ def vocab_embed(pc: ParamCtx, path: str, table, ids: jnp.ndarray, vocab_local: i
     in_range = (local >= 0) & (local < vocab_local)
     safe = jnp.clip(local, 0, vocab_local - 1)
     t = pc.use(f"{path}/table", table)
-    e = jnp.take(t, safe, axis=0)
+    if isinstance(t, QTensor):
+        # lazy-quant: gather int8 rows, dequantize only the touched rows
+        e = (jnp.take(t.codes, safe, axis=0).astype(jnp.float32)
+             * t.scale.astype(jnp.float32)).astype(pc.compute_dtype)
+    else:
+        e = jnp.take(t, safe, axis=0)
     e = jnp.where(in_range[..., None], e, jnp.zeros_like(e))
     return sp_out(pc, e)
 
 
 def vocab_logits(pc: ParamCtx, path: str, w_unembed, x):
     """x: (B, S, D) -> local logits (B, S, V/tp)."""
-    return x @ pc.use(f"{path}/w", w_unembed)
+    return dense(pc, f"{path}/w", w_unembed, x)
 
 
 def vocab_parallel_xent(pc: ParamCtx, local_logits, labels, vocab_local: int,
@@ -169,7 +175,7 @@ def fused_vocab_xent(pc: ParamCtx, path: str, w_unembed, x, labels,
     live only inside a rematerialized scan body (65-500k-seq safe).
     x: (B, S, D) full-seq activations; labels: (B, S).  Returns mean loss.
     """
-    w = pc.use(path, w_unembed)               # FSDP gather once, outside scan
+    w = as_array(pc.use(path, w_unembed), pc.compute_dtype)  # gather once, outside scan
     B, S, D = x.shape
     c = min(chunk, S)
     assert S % c == 0, "sequence must divide the xent chunk"
@@ -204,9 +210,11 @@ def fused_vocab_xent(pc: ParamCtx, path: str, w_unembed, x, labels,
 
 
 # ---------------------------------------------------------------------------
-# Generic dense projection (serving path may swap in the quant_matmul kernel)
+# Generic dense projection (serving path swaps in the quant_matmul kernel)
 # ---------------------------------------------------------------------------
 
 
 def dense(pc: ParamCtx, path: str, w, x):
-    return x @ pc.use(path, w)
+    """``x @ use(w)`` with leaf-type dispatch: under lazy-quant the packed
+    int8 codes go straight to the Pallas ``quant_matmul`` kernel."""
+    return dense_dispatch(x, pc.use(path, w))

@@ -34,6 +34,12 @@ class Model:
     init_caches: Callable
     train_batch_spec: Callable
     decode_batch_spec: Callable
+    # serving prefill: (pc, params, batch, caches, **kw) ->
+    # (last-position local logits | None, filled caches).  None logits mean
+    # "seed decode with BOS" (enc-dec: the prompt is the source modality).
+    prefill: Callable = None
+    # (b, s_prompt, s_max) -> ShapeDtypeStruct tree for the prefill batch
+    prefill_batch_spec: Callable = None
 
 
 def _tokens_spec(b, s):
@@ -41,6 +47,10 @@ def _tokens_spec(b, s):
         "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
         "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
     }
+
+
+def _token_prefill_spec(b, s_prompt, s_max):
+    return {"tokens": jax.ShapeDtypeStruct((b, s_prompt), jnp.int32)}
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -58,6 +68,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 transformer.init_caches(cfg, batch, s_max, tp, dtype),
             train_batch_spec=lambda b, s: _tokens_spec(b, s),
             decode_batch_spec=lambda b, s: {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
+            prefill=lambda pc, p, b, caches, **kw: transformer.prefill(
+                cfg, pc, p, b["tokens"], caches, **kw),
+            prefill_batch_spec=_token_prefill_spec,
         )
 
     if fam == "ssm":
@@ -72,6 +85,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 ssm_lm.init_ssm_lm_caches(cfg, batch, tp, dtype),
             train_batch_spec=lambda b, s: _tokens_spec(b, s),
             decode_batch_spec=lambda b, s: {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
+            prefill=lambda pc, p, b, caches, **kw: ssm_lm.prefill(
+                cfg, pc, p, b["tokens"], caches, **kw),
+            prefill_batch_spec=_token_prefill_spec,
         )
 
     if fam == "hybrid":
@@ -86,6 +102,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 hybrid.init_hybrid_caches(cfg, batch, s_max, tp, dtype),
             train_batch_spec=lambda b, s: _tokens_spec(b, s),
             decode_batch_spec=lambda b, s: {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
+            prefill=lambda pc, p, b, caches, **kw: hybrid.prefill(
+                cfg, pc, p, b["tokens"], caches, **kw),
+            prefill_batch_spec=_token_prefill_spec,
         )
 
     if fam == "encdec":
@@ -114,6 +133,11 @@ def build_model(cfg: ModelConfig) -> Model:
                 encdec.init_decoder_caches(cfg, batch, s_max, tp, dtype),
             train_batch_spec=train_spec,
             decode_batch_spec=decode_spec,
+            prefill=lambda pc, p, b, caches, **kw: encdec.prefill(
+                cfg, pc, p, b["frames"], caches, **kw),
+            # the cross caches are sized by s_max, so the source spans it
+            prefill_batch_spec=lambda b, s_prompt, s_max: {
+                "frames": jax.ShapeDtypeStruct((b, s_max, d_front), jnp.float32)},
         )
 
     if fam == "vlm":
@@ -142,6 +166,11 @@ def build_model(cfg: ModelConfig) -> Model:
                 vlm.init_vlm_caches(cfg, batch, s_max, tp, dtype),
             train_batch_spec=train_spec,
             decode_batch_spec=decode_spec,
+            prefill=lambda pc, p, b, caches, **kw: vlm.prefill(
+                cfg, pc, p, b["tokens"], b["images"], caches, **kw),
+            prefill_batch_spec=lambda b, s_prompt, s_max: {
+                "tokens": jax.ShapeDtypeStruct((b, s_prompt), jnp.int32),
+                "images": jax.ShapeDtypeStruct((b, n_img, d_front), jnp.float32)},
         )
 
     raise ValueError(f"unknown family {fam}")

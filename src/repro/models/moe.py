@@ -25,6 +25,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import as_array
 from repro.models.common import ParamCtx, init_dense
 from repro.models.layers import sp_out
 
@@ -100,11 +101,14 @@ def moe_block(pc: ParamCtx, path: str, p, x, dims: MoEDims):
     buf = buf[:, :cap]                                         # (e_loc, cap, D)
 
     # --- expert FFN (batched matmul over local experts) -------------------
-    w_up = pc.use(f"{path}/w_up", p["w_up"])
-    w_down = pc.use(f"{path}/w_down", p["w_down"])
+    # Lazy-quant fallback: the (e, c, d) x (e, d, f) expert einsum has no
+    # quant_matmul lowering (batched expert dim), so packed stacks are
+    # dequantized here; per-expert kernel dispatch is future work.
+    w_up = as_array(pc.use(f"{path}/w_up", p["w_up"]), x.dtype)
+    w_down = as_array(pc.use(f"{path}/w_down", p["w_down"]), x.dtype)
     up = jnp.einsum("ecd,edf->ecf", buf, w_up)
     if dims.act in ("swiglu", "geglu"):
-        w_gate = pc.use(f"{path}/w_gate", p["w_gate"])
+        w_gate = as_array(pc.use(f"{path}/w_gate", p["w_gate"]), x.dtype)
         g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
         h = (jax.nn.silu(g) if dims.act == "swiglu"
              else jax.nn.gelu(g, approximate=True)) * up

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ParamCtx, init_dense
-from repro.models.layers import sp_out
+from repro.models.layers import dense, sp_out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,10 +158,10 @@ def ssm_block(pc: ParamCtx, path: str, p, x, dims: SSMDims):
     B, S, D = x.shape
     hl, P, N = dims.heads_local, dims.head_dim, dims.d_state
 
-    xr = x @ pc.use(f"{path}/wx", p["wx"])           # (B,S,dl)
-    z = x @ pc.use(f"{path}/wz", p["wz"])
-    bc = x @ pc.use(f"{path}/w_bc", p["w_bc"])       # replicated
-    dt = x @ pc.use(f"{path}/w_dt", p["w_dt"])       # (B,S,hl)
+    xr = dense(pc, f"{path}/wx", p["wx"], x)         # (B,S,dl)
+    z = dense(pc, f"{path}/wz", p["wz"], x)
+    bc = dense(pc, f"{path}/w_bc", p["w_bc"], x)     # replicated
+    dt = dense(pc, f"{path}/w_dt", p["w_dt"], x)     # (B,S,hl)
 
     xr = jax.nn.silu(_causal_depthwise_conv(xr, pc.use_small(f"{path}/conv_x", p["conv_x"])))
     bc = jax.nn.silu(_causal_depthwise_conv(bc, pc.use_small(f"{path}/conv_bc", p["conv_bc"])))
@@ -179,7 +179,7 @@ def ssm_block(pc: ParamCtx, path: str, p, x, dims: SSMDims):
 
     y = y.reshape(B, S, dims.d_inner_local)
     y = _gated_norm(pc, f"{path}/norm", p["norm"], y, z)
-    out = y @ pc.use(f"{path}/wo", p["wo"])
+    out = dense(pc, f"{path}/wo", p["wo"], y)
     return sp_out(pc, out)
 
 
@@ -207,10 +207,10 @@ def ssm_decode_step(pc: ParamCtx, path: str, p, x, cache: SSMCache, dims: SSMDim
     B = x.shape[0]
     hl, P, N = dims.heads_local, dims.head_dim, dims.d_state
 
-    xr = x @ pc.use(f"{path}/wx", p["wx"])
-    z = x @ pc.use(f"{path}/wz", p["wz"])
-    bc = x @ pc.use(f"{path}/w_bc", p["w_bc"])
-    dt = x @ pc.use(f"{path}/w_dt", p["w_dt"])
+    xr = dense(pc, f"{path}/wx", p["wx"], x)
+    z = dense(pc, f"{path}/wz", p["wz"], x)
+    bc = dense(pc, f"{path}/w_bc", p["w_bc"], x)
+    dt = dense(pc, f"{path}/w_dt", p["w_dt"], x)
 
     # rolling conv caches
     cx = jnp.concatenate([cache.conv_x, xr.astype(cache.conv_x.dtype)], axis=1)
@@ -235,7 +235,7 @@ def ssm_decode_step(pc: ParamCtx, path: str, p, x, cache: SSMCache, dims: SSMDim
 
     y = y.reshape(B, 1, dims.d_inner_local)
     y = _gated_norm(pc, f"{path}/norm", p["norm"], y, z)
-    out = pc.ctx.psum_model(y @ pc.use(f"{path}/wo", p["wo"]))
+    out = pc.ctx.psum_model(dense(pc, f"{path}/wo", p["wo"], y))
     new = SSMCache(state=state.astype(cache.state.dtype),
                    conv_x=cx[:, 1:], conv_bc=cb[:, 1:])
     return out, new

@@ -69,6 +69,21 @@ def init_ssm_lm_caches(cfg: ModelConfig, batch: int, tp: int, dtype=jnp.bfloat16
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
 
 
+def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, caches,
+            *, attn_impl="auto"):
+    """SSM prefill: run the recurrence over the prompt (scan of decode steps
+    — the state update IS the prefill for a constant-state mixer).
+    tokens: (B, S_p).  Returns (last-position local logits, caches)."""
+    del attn_impl  # no attention in this family
+
+    def step(caches, t):
+        logits, caches = decode_step(cfg, pc, params, t[:, None], caches)
+        return caches, logits
+
+    caches, logits = jax.lax.scan(step, caches, jnp.moveaxis(tokens, 1, 0))
+    return logits[-1], caches
+
+
 def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
     tp = pc.ctx.tp
     sd = ssm_dims(cfg, tp)

@@ -27,6 +27,7 @@ from repro.models.attention import (
     decode_self_attention,
     init_attention,
     init_kv_cache,
+    prefill_kv_cache,
     self_attention,
 )
 from repro.models.common import ParamCtx, init_dense, key_iter
@@ -136,6 +137,42 @@ def init_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int, dtype=jnp.bfl
     one = init_kv_cache(batch, s_max, ad, dtype)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+
+
+def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, caches,
+            *, attn_impl="auto"):
+    """Parallel prefill: one forward pass over the prompt that also writes
+    every layer's self-attention K/V into ``caches`` and stamps per-sequence
+    lengths — the step continuous batching runs at admission time.
+
+    tokens: (B, S_p) with S_p <= s_max.  Returns (last-position local logits
+    (B, 1, V/tp), filled caches).  ``attn_impl="flash"`` runs the prompt
+    through the Pallas flash-attention kernel.
+    """
+    tp = pc.ctx.tp
+    ad = attn_dims(cfg, tp)
+    md = moe_dims(cfg, tp) if cfg.family == "moe" else None
+    vl = padded_vocab_local(cfg, tp)
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], tokens, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def block(x, scanned):
+        lp, cache = scanned
+        h = L.rmsnorm(pc, "blocks/ln1", lp["ln1"], x, cfg.norm_eps)
+        a, (k, v) = self_attention(pc, "blocks/attn", lp["attn"], h, ad,
+                                   impl=attn_impl)
+        x = x + a
+        h = L.rmsnorm(pc, "blocks/ln2", lp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe_block(pc, "blocks/moe", lp["moe"], h, md)
+        else:
+            m = L.mlp(pc, "blocks/mlp", lp["mlp"], h, cfg.mlp_act)
+        return x + m, prefill_kv_cache(pc, cache, k, v, ad)
+
+    x, new_caches = jax.lax.scan(block, x, (params["blocks"], caches))
+    x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
+    logits = L.vocab_logits(pc, "unembed", params["unembed"]["w"], x[:, -1:, :])
+    return logits, new_caches
 
 
 def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches,

@@ -16,7 +16,8 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.attention import (
     KVCache, cross_attention, cross_attention_cached, decode_self_attention,
-    init_attention, init_kv_cache, project_cross_kv, self_attention,
+    init_attention, init_kv_cache, prefill_kv_cache, project_cross_kv,
+    self_attention,
 )
 from repro.models.common import ParamCtx, init_dense, key_iter
 from repro.models.transformer import attn_dims, padded_vocab_local, _stack
@@ -87,7 +88,7 @@ def forward(cfg: ModelConfig, pc: ParamCtx, params, tokens, images,
     """tokens: (B,S); images: (B, n_img, d_frontend) stub patch embeddings."""
     tp = pc.ctx.tp
     vl = padded_vocab_local(cfg, tp)
-    memory = images.astype(pc.compute_dtype) @ pc.use("adapter", params["adapter"])
+    memory = L.dense(pc, "adapter", params["adapter"], images.astype(pc.compute_dtype))
     x = L.vocab_embed(pc, "embed", params["embed"]["table"], tokens, vl)
     x = x.astype(pc.compute_dtype)
     period = _period_fn(cfg, pc, tp, memory, attn_impl)
@@ -131,7 +132,7 @@ def init_vlm_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
 def fill_cross_caches(cfg: ModelConfig, pc, params, images, caches):
     # Prefill step for the cross-attention memory: project once, cache.
     ad = attn_dims(cfg, pc.ctx.tp)
-    memory = images.astype(pc.compute_dtype) @ pc.use("adapter", params["adapter"])
+    memory = L.dense(pc, "adapter", params["adapter"], images.astype(pc.compute_dtype))
 
     def body(_, pp):
         k, v = project_cross_kv(pc, "cross/attn", pp["cross"]["attn"], memory, ad)
@@ -140,6 +141,53 @@ def fill_cross_caches(cfg: ModelConfig, pc, params, images, caches):
     _, (ks, vs) = jax.lax.scan(body, (), params["periods"])
     return {**caches, "cross_k": ks.astype(caches["cross_k"].dtype),
             "cross_v": vs.astype(caches["cross_v"].dtype)}
+
+
+def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, images, caches,
+            *, attn_impl="auto"):
+    """Real prefill: project the image memory, fill the per-period cross K/V
+    caches, AND run the prompt through the self-attention layers, writing
+    their K/V and per-sequence lengths.  Returns (last logits, caches).
+
+    Mirrors ``decode_step``'s period body (the serving convention: no
+    sp_gather — the prefill ParamCtx runs with ``sp=False``, correct at any
+    tp); any change to the period math in ``_period_fn`` must land here and
+    in ``decode_step`` too."""
+    tp = pc.ctx.tp
+    ad = attn_dims(cfg, tp)
+    vl = padded_vocab_local(cfg, tp)
+    memory = L.dense(pc, "adapter", params["adapter"], images.astype(pc.compute_dtype))
+    x = L.vocab_embed(pc, "embed", params["embed"]["table"], tokens, vl)
+    x = x.astype(pc.compute_dtype)
+
+    def period(x, scanned):
+        pp, pcache = scanned
+        cp = pp["cross"]
+        ck, cv = project_cross_kv(pc, "cross/attn", cp["attn"], memory, ad)
+        h = L.rmsnorm(pc, "cross/ln", cp["ln"], x, cfg.norm_eps)
+        a = cross_attention_cached(pc, "cross/attn", cp["attn"], h, ck, cv, ad)
+        x = x + jnp.tanh(cp["gate"]).astype(x.dtype) * a
+        h = L.rmsnorm(pc, "cross/ln2", cp["ln2"], x, cfg.norm_eps)
+        m = L.mlp(pc, "cross/mlp", cp["mlp"], h, cfg.mlp_act)
+        x = x + jnp.tanh(cp["mlp_gate"]).astype(x.dtype) * m
+        new_caches = {"cross_k": ck.astype(pcache["cross_k"].dtype),
+                      "cross_v": cv.astype(pcache["cross_v"].dtype)}
+        for j in range(cfg.cross_attn_period - 1):
+            sp = pp[f"self{j}"]
+            h = L.rmsnorm(pc, f"self{j}/ln1", sp["ln1"], x, cfg.norm_eps)
+            a, (k, v) = self_attention(pc, f"self{j}/attn", sp["attn"], h, ad,
+                                       impl=attn_impl)
+            new_caches[f"self{j}"] = prefill_kv_cache(pc, pcache[f"self{j}"],
+                                                      k, v, ad)
+            x = x + a
+            h = L.rmsnorm(pc, f"self{j}/ln2", sp["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp(pc, f"self{j}/mlp", sp["mlp"], h, cfg.mlp_act)
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(period, x, (params["periods"], caches))
+    x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
+    logits = L.vocab_logits(pc, "unembed", params["unembed"]["w"], x[:, -1:, :])
+    return logits, new_caches
 
 
 def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):

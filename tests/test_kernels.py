@@ -91,6 +91,34 @@ class TestQuantMatmulKernel:
                                    rtol=2e-2 if xdtype == jnp.bfloat16 else 1e-5,
                                    atol=1e-2)
 
+    @pytest.mark.parametrize("mnk", [(5, 7, 130),        # tiny + non-aligned
+                                     (33, 65, 100),      # nothing 128-aligned
+                                     (257, 129, 513),    # just past block edges
+                                     (1, 640, 64),       # single decode row
+                                     (4, 96, 2048)])     # decode batch, K > bk
+    def test_ragged_non_aligned(self, mnk):
+        """M, N, K off the 128/256/512 block grid: padding + adaptive blocks."""
+        m, n, k = mnk
+        x = jax.random.normal(key(9), (m, k), jnp.float32)
+        codes = jax.random.randint(key(10), (k, n), -127, 128, jnp.int8)
+        scale = jnp.float32(0.02)
+        out = ops.quant_matmul(x, codes, scale)
+        assert out.shape == (m, n)
+        want = ref.quant_matmul_ref(x, codes, scale)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_int16_codes(self):
+        """bits in 8..15 store int16 codes; the kernel streams them the same."""
+        x = jax.random.normal(key(22), (32, 256), jnp.float32)
+        codes = jax.random.randint(key(23), (256, 128), -(2**15 - 1), 2**15 - 1,
+                                   jnp.int16)
+        scale = jnp.float32(1e-4)
+        out = ops.quant_matmul(x, codes, scale)
+        want = ref.quant_matmul_ref(x, codes, scale)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+
     def test_padding_edge(self):
         x = jax.random.normal(key(9), (5, 130), jnp.float32)
         codes = jax.random.randint(key(10), (130, 7), -20, 20, jnp.int8)
@@ -124,6 +152,21 @@ class TestFlashAttentionKernel:
         np.testing.assert_allclose(np.asarray(out, np.float32),
                                    np.asarray(want, np.float32),
                                    rtol=3e-2, atol=3e-2)
+
+    @pytest.mark.parametrize("S", [100, 300, 513])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_ragged_seq_len(self, S, causal):
+        """Non-128-aligned S: the wrapper pads and the kernel masks the
+        padded keys via s_valid."""
+        shape = (1, 2, S, 64)
+        q = jax.random.normal(key(30), shape, jnp.float32)
+        k = jax.random.normal(key(31), shape, jnp.float32)
+        v = jax.random.normal(key(32), shape, jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=causal)
+        assert out.shape == shape
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
 
     def test_matches_model_chunked_path(self):
         """The jnp chunked attention in models/ mirrors the kernel."""

@@ -1,0 +1,350 @@
+"""Serving fast-path tests: lazy-quant kernel dispatch numerics, real
+prefill correctness, per-sequence cache lengths, and the continuous-batching
+driver end to end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.quantization import default_exempt, storage_dtype
+from repro.kernels import ops
+from repro.launch.mesh import axis_ctx_for, make_test_mesh
+from repro.launch.steps import (
+    build_cached_prefill, build_decode_step, build_init_fn,
+    init_global_caches)
+from repro.models.common import (
+    ParamCtx, QTensor, dequant, pack_params_for_serving)
+from repro.models.model import build_model
+
+MESH = make_test_mesh((1, 1), ("data", "model"))
+
+
+def _pack2d(w, bits, key):
+    """Deterministic nearest-rounding pack, mirroring pack_params_for_serving."""
+    del key
+    delta = 1.0 / (2.0**bits - 1.0)
+    lim = 2**bits - 1
+    wf = w.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(wf)), 1e-12)
+    scale = (s * delta).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(wf / scale), -lim, lim).astype(storage_dtype(bits))
+    return QTensor(codes=codes, scale=scale)
+
+
+class TestLazyQuantDense:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 7, 8])
+    def test_matches_eager_dequant(self, bits):
+        """Kernel-dispatched x @ QTensor == x @ dequant(QTensor) in fp32."""
+        w = jax.random.normal(jax.random.PRNGKey(bits), (96, 72), jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(100 + bits), (5, 96), jnp.float32)
+        q = _pack2d(w, bits, None)
+        assert q.codes.dtype == (jnp.int8 if bits <= 7 else jnp.int16)
+        lazy = ops.dense_dispatch(x, q)
+        eager = x @ dequant(q, jnp.float32)
+        np.testing.assert_allclose(np.asarray(lazy), np.asarray(eager),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_leading_dims_and_bf16(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 48), jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64)).astype(jnp.bfloat16)
+        q = _pack2d(w, 7, None)
+        lazy = ops.dense_dispatch(x, q)
+        assert lazy.shape == (2, 3, 48)
+        assert lazy.dtype == jnp.bfloat16
+        eager = (x @ dequant(q, jnp.bfloat16)).astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(lazy, np.float32),
+                                   np.asarray(eager), rtol=3e-2, atol=3e-2)
+
+    def test_paramctx_lazy_returns_qtensor(self):
+        axes = axis_ctx_for(MESH)
+        q = _pack2d(jnp.ones((8, 8)), 7, None)
+        pc_eager = ParamCtx(ctx=axes, compute_dtype=jnp.float32)
+        pc_lazy = ParamCtx(ctx=axes, compute_dtype=jnp.float32, lazy_quant=True)
+        assert isinstance(pc_lazy.use("blocks/attn/wq", q), QTensor)
+        assert isinstance(pc_eager.use("blocks/attn/wq", q), jnp.ndarray)
+
+
+class TestDecodeLazyVsEager:
+    def test_packed_decode_matches_eager_dequant(self):
+        """One decode step, lazy kernel path vs eager dequant: same token."""
+        cfg = smoke_variant(get_config("yi-6b"))
+        model = build_model(cfg)
+        axes = axis_ctx_for(MESH)
+        init_fn, _ = build_init_fn(model, MESH, axes)
+        params = init_fn(jax.random.PRNGKey(0))
+        qparams = pack_params_for_serving(params, 7, jax.random.PRNGKey(1),
+                                          exempt=default_exempt)
+        B, S = 2, 16
+        ptree = jax.eval_shape(lambda: qparams)
+        caches = model.init_caches(B, S, tp=1, dtype=jnp.float32)
+        toks = {}
+        for lazy in (False, True):
+            ss = build_decode_step(model, MESH, axes, params_tree=ptree,
+                                   s_max=S, batch_global=B, lazy_quant=lazy)
+            tok, _ = ss.fn(qparams, {"token": jnp.ones((B, 1), jnp.int32)},
+                           caches)
+            toks[lazy] = np.asarray(tok)
+        np.testing.assert_array_equal(toks[False], toks[True])
+
+
+class TestPrefill:
+    @pytest.mark.parametrize("arch", ["yi-6b", "qwen3-moe-235b-a22b",
+                                      "mamba2-780m", "jamba-1.5-large-398b",
+                                      "llama-3.2-vision-90b",
+                                      "seamless-m4t-large-v2"])
+    def test_prefill_then_decode_all_families(self, arch):
+        """Prefill fills the caches and decode continues from them for every
+        cache topology (KV, SSM state, hybrid, cross-attention)."""
+        cfg = smoke_variant(get_config(arch))
+        model = build_model(cfg)
+        axes = axis_ctx_for(MESH)
+        init_fn, _ = build_init_fn(model, MESH, axes)
+        params = init_fn(jax.random.PRNGKey(0))
+        B, S_max, S_p = 2, 32, 8
+        ss = build_decode_step(model, MESH, axes, s_max=S_max, batch_global=B)
+        pf = build_cached_prefill(model, MESH, axes, s_max=S_max, s_prompt=S_p,
+                                  batch_global=B)
+        caches = init_global_caches(model, MESH, axes, s_max=S_max,
+                                        batch_global=B)
+        batch = _prefill_batch(model, cfg, B, S_p, S_max)
+        tok, caches = pf.fn(params, batch, caches,
+                            jnp.ones((B,), jnp.bool_))
+        assert tok.shape == (B, 1)
+        for _ in range(3):
+            tok, caches = ss.fn(params, {"token": tok}, caches)
+            assert np.all(np.isfinite(np.asarray(tok)))
+
+    def test_prefill_matches_full_forward_greedy(self):
+        """Dense arch: prefill+decode greedy == re-running the full forward
+        over the growing sequence (the teacher-forcing oracle)."""
+        cfg = smoke_variant(get_config("yi-6b"))
+        model = build_model(cfg)
+        axes = axis_ctx_for(MESH)
+        init_fn, _ = build_init_fn(model, MESH, axes)
+        params = init_fn(jax.random.PRNGKey(0))
+        B, S_max, S_p, n_new = 2, 32, 8, 4
+        prompt = jax.random.randint(jax.random.PRNGKey(7), (B, S_p), 2,
+                                    cfg.vocab_size)
+
+        # oracle: full forward over the sequence so far, greedy argmax
+        from repro.models.transformer import forward as tf_forward
+
+        def oracle_next(tokens):
+            def local(p, t):
+                pc = ParamCtx(ctx=axes, compute_dtype=jnp.float32)
+                lg = tf_forward(cfg, pc, p, t)
+                return jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
+            from jax.sharding import PartitionSpec as P
+            sm = jax.shard_map(local, mesh=MESH, in_specs=(P(), P()),
+                               out_specs=P(), check_vma=False)
+            return np.asarray(sm(params, tokens))
+
+        seq = np.array(prompt)
+        want = []
+        for _ in range(n_new + 1):
+            nxt = oracle_next(jnp.asarray(seq))
+            want.append(nxt)
+            seq = np.concatenate([seq, nxt[:, None]], axis=1)
+
+        ss = build_decode_step(model, MESH, axes, s_max=S_max, batch_global=B)
+        pf = build_cached_prefill(model, MESH, axes, s_max=S_max, s_prompt=S_p,
+                                  batch_global=B)
+        caches = init_global_caches(model, MESH, axes, s_max=S_max,
+                                        batch_global=B)
+        tok, caches = pf.fn(params, {"tokens": prompt}, caches,
+                            jnp.ones((B,), jnp.bool_))
+        got = [np.asarray(tok)[:, 0]]
+        for _ in range(n_new):
+            tok, caches = ss.fn(params, {"token": tok}, caches)
+            got.append(np.asarray(tok)[:, 0])
+        np.testing.assert_array_equal(np.stack(got), np.stack(want))
+
+    def test_flash_prefill_matches_ref_prefill(self):
+        cfg = smoke_variant(get_config("yi-6b"))
+        model = build_model(cfg)
+        axes = axis_ctx_for(MESH)
+        init_fn, _ = build_init_fn(model, MESH, axes)
+        params = init_fn(jax.random.PRNGKey(0))
+        B, S_max, S_p = 2, 32, 8
+        prompt = jax.random.randint(jax.random.PRNGKey(3), (B, S_p), 2,
+                                    cfg.vocab_size)
+        caches = init_global_caches(model, MESH, axes, s_max=S_max,
+                                        batch_global=B)
+        toks = {}
+        for impl in ("auto", "flash"):
+            pf = build_cached_prefill(model, MESH, axes, s_max=S_max,
+                                      s_prompt=S_p, batch_global=B,
+                                      attn_impl=impl)
+            tok, _ = pf.fn(params, {"tokens": prompt}, caches,
+                           jnp.ones((B,), jnp.bool_))
+            toks[impl] = np.asarray(tok)
+        np.testing.assert_array_equal(toks["auto"], toks["flash"])
+
+
+def _prefill_batch(model, cfg, B, S_p, S_max):
+    spec = model.prefill_batch_spec(B, S_p, S_max)
+    batch = {}
+    for name, sds in spec.items():
+        if sds.dtype == jnp.int32:
+            batch[name] = jax.random.randint(jax.random.PRNGKey(11), sds.shape,
+                                             2, cfg.vocab_size)
+        else:
+            batch[name] = jax.random.normal(jax.random.PRNGKey(12), sds.shape,
+                                            dtype=sds.dtype)
+    return batch
+
+
+class TestContinuousBatching:
+    def test_staggered_admission_is_isolated(self):
+        """Admitting B into slot 1 mid-flight must not disturb slot 0, and
+        both slots must decode exactly what a solo run decodes (per-sequence
+        cache lengths)."""
+        cfg = smoke_variant(get_config("yi-6b"))
+        model = build_model(cfg)
+        axes = axis_ctx_for(MESH)
+        init_fn, _ = build_init_fn(model, MESH, axes)
+        params = init_fn(jax.random.PRNGKey(0))
+        B, S_max, S_p = 2, 32, 8
+        pa = jax.random.randint(jax.random.PRNGKey(21), (S_p,), 2, cfg.vocab_size)
+        pb = jax.random.randint(jax.random.PRNGKey(22), (S_p,), 2, cfg.vocab_size)
+
+        ss = build_decode_step(model, MESH, axes, s_max=S_max, batch_global=B)
+        pf = build_cached_prefill(model, MESH, axes, s_max=S_max, s_prompt=S_p,
+                                  batch_global=B)
+
+        def solo(prompt, n):
+            """Both slots carry the same prompt; read slot 0."""
+            caches = init_global_caches(model, MESH, axes, s_max=S_max,
+                                        batch_global=B)
+            toks = jnp.broadcast_to(prompt[None], (B, S_p))
+            tok, caches = pf.fn(params, {"tokens": toks}, caches,
+                                jnp.ones((B,), jnp.bool_))
+            out = [int(np.asarray(tok)[0, 0])]
+            for _ in range(n):
+                tok, caches = ss.fn(params, {"token": tok}, caches)
+                out.append(int(np.asarray(tok)[0, 0]))
+            return out
+
+        want_a, want_b = solo(pa, 6), solo(pb, 3)
+
+        # staggered: A at t=0 in slot 0; B at t=3 in slot 1
+        caches = init_global_caches(model, MESH, axes, s_max=S_max,
+                                        batch_global=B)
+        toks = jnp.stack([pa, pa])
+        tok, caches = pf.fn(params, {"tokens": toks}, caches,
+                            jnp.asarray([True, False]))
+        got_a = [int(np.asarray(tok)[0, 0])]
+        cur = np.array(tok)
+        for _ in range(3):
+            tok, caches = ss.fn(params, {"token": jnp.asarray(cur)}, caches)
+            cur = np.array(tok)
+            got_a.append(int(cur[0, 0]))
+        toks = jnp.stack([pb, pb])           # slot 0's entry is ignored (mask)
+        tok2, caches = pf.fn(params, {"tokens": toks}, caches,
+                             jnp.asarray([False, True]))
+        cur[1] = np.asarray(tok2)[1]
+        got_b = [int(cur[1, 0])]
+        for _ in range(3):
+            tok, caches = ss.fn(params, {"token": jnp.asarray(cur)}, caches)
+            cur = np.array(tok)
+            got_a.append(int(cur[0, 0]))
+            got_b.append(int(cur[1, 0]))
+        assert got_a == want_a
+        assert got_b == want_b
+
+    def test_seqpar_kv_cache_tp4_matches_uncached_oracle(self):
+        """Replicated-KV arch under tp=4 uses the sequence-parallel cache;
+        per-sequence lengths must cross the shard-ownership boundary
+        (S_max/tp) and still reproduce the non-cached full-forward greedy
+        decode on the same mesh/params exactly.
+
+        Subprocess so XLA gets fake host devices before jax initializes
+        (same pattern as test_distributed)."""
+        import os
+        import subprocess
+        import sys
+
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import sys
+sys.path.insert(0, %(src)r)
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config, smoke_variant
+from repro.launch.mesh import axis_ctx_for, make_test_mesh
+from repro.launch.steps import (
+    _greedy_pick, build_cached_prefill, build_decode_step, build_init_fn,
+    init_global_caches)
+from repro.models.common import ParamCtx
+from repro.models.model import build_model
+from repro.models.attention import kv_cache_seq_parallel
+from repro.models.transformer import attn_dims, forward, padded_vocab_local
+
+TP = 4
+cfg = smoke_variant(get_config("glm4-9b"))   # smoke n_kv=2: tp=4 -> seqpar
+assert kv_cache_seq_parallel(attn_dims(cfg, TP)), "must hit the seqpar path"
+model = build_model(cfg)
+B, S_max, S_p, n_new = 2, 32, 6, 4           # lengths cross S_max/tp = 8
+prompt = jax.random.randint(jax.random.PRNGKey(5), (B, S_p), 2, cfg.vocab_size)
+
+mesh = make_test_mesh((1, TP), ("data", "model"))
+axes = axis_ctx_for(mesh)
+init_fn, param_specs = build_init_fn(model, mesh, axes)
+params = init_fn(jax.random.PRNGKey(0))
+# init draws replicated leaves (wk/wv here) independently per TP rank; the
+# oracle and the cached path consume them through different shards, so
+# canonicalize: round-trip through the host makes every replica identical.
+params = jax.tree_util.tree_map(
+    lambda x: jax.device_put(np.asarray(x), x.sharding), params)
+vl = padded_vocab_local(cfg, TP)
+
+# oracle: full (non-cached) forward over the growing sequence, same mesh
+def local_oracle(p, t):
+    pc = ParamCtx(ctx=axes, compute_dtype=jnp.float32)
+    lg = forward(cfg, pc, p, t)[:, -1:, :]
+    return _greedy_pick(axes, TP, vl, lg)
+
+oracle = jax.jit(jax.shard_map(local_oracle, mesh=mesh,
+                               in_specs=(param_specs, P()), out_specs=P(),
+                               check_vma=False))
+seq = np.array(prompt)
+want = []
+for _ in range(n_new + 1):
+    nxt = np.asarray(oracle(params, jnp.asarray(seq)))
+    want.append(nxt[:, 0])
+    seq = np.concatenate([seq, nxt], axis=1)
+
+# cached path: prefill + seqpar decode with per-sequence lengths
+pf = build_cached_prefill(model, mesh, axes, s_max=S_max, s_prompt=S_p,
+                          batch_global=B)
+ss = build_decode_step(model, mesh, axes, s_max=S_max, batch_global=B)
+caches = init_global_caches(model, mesh, axes, s_max=S_max, batch_global=B)
+tok, caches = pf.fn(params, {"tokens": prompt}, caches, jnp.ones((B,), jnp.bool_))
+got = [np.asarray(tok)[:, 0]]
+for _ in range(n_new):
+    tok, caches = ss.fn(params, {"token": tok}, caches)
+    got.append(np.asarray(tok)[:, 0])
+np.testing.assert_array_equal(np.stack(got), np.stack(want))
+print("SEQPAR_OK")
+"""
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        out = subprocess.run([sys.executable, "-c", script % {"src": src}],
+                             capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "SEQPAR_OK" in out.stdout
+
+    def test_driver_end_to_end_packed(self):
+        from repro.launch.serve import run_serve
+
+        stats = run_serve("yi-6b", smoke=True, steps=24, batch=2, s_max=32,
+                          prompt_len=8, serve_bits=7, attn_impl="ref",
+                          requests=4, max_new=6, quiet=True)
+        assert stats.admitted == 4          # mid-flight admissions happened
+        assert stats.completed >= 3
+        assert stats.decoded_tokens > 0
+        assert stats.packed_vs_f32 < 1 / 3  # int8 path streams < 1/3 the bytes

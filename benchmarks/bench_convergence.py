@@ -1,48 +1,28 @@
 """Paper Fig. 2: convergence + energy for FWQ vs Full-Precision / Unified-Q /
-Rand-Q (CNN on synthetic-CIFAR, non-iid clients)."""
+Rand-Q (CNN on synthetic-CIFAR, non-iid clients) — each scheme is one
+fl-sim RunSpec through the `repro.api` facade."""
 
 from __future__ import annotations
 
 import json
 
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import emit, timed
-from repro.core.energy import heterogeneous_fleet, memory_capacities
-from repro.data import ClientBatcher, SyntheticImages, dirichlet_partition
-from repro.fed import FLOrchestrator, FLSimulation, OrchestratorConfig, SimConfig
-from repro.models.cnn import mobilenet, resnet, xent_loss
+from benchmarks.common import emit
+from repro.api import RunSpec, Session
 
 
-def run_scheme(scheme: str, *, n_clients=8, rounds=60, seed=0, model_kind="resnet"):
-    model = (mobilenet(width=8, n_stages=2) if model_kind == "mobilenet"
-             else resnet(depth_blocks=(1, 1), width=8))
-    loss = xent_loss(model)
-    sim = FLSimulation(loss, model.init, SimConfig(n_clients=n_clients, lr=0.2,
-                                                   seed=seed))
-    imgs, labels = SyntheticImages(n=2048, hw=16, seed=seed).generate()
-    parts = dirichlet_partition(labels, n_clients, alpha=0.5, seed=seed)
-    batcher = ClientBatcher(imgs, labels, parts, batch=16, seed=seed)
-    fleet = heterogeneous_fleet(n_clients, seed=seed, group_step_mhz=5.0)
-    caps = memory_capacities(n_clients, lo_mb=2.0, hi_mb=8.0) * 1e6
-    # error tolerance sized so the budget admits ~half the cohort at 8 bits
-    # (lambda = 0.5 * e2 * d * delta_8^2; see constraint (23))
-    orch = FLOrchestrator(
-        OrchestratorConfig(n_devices=n_clients, n_rounds=rounds, scheme=scheme,
-                           model_dim_d=1 << 16, error_tolerance=4.5, seed=seed),
-        fleet, caps, grad_bytes=1e6)
+def run_scheme(scheme: str, *, n_clients=8, rounds=60, seed=0,
+               model_kind="resnet"):
+    """The Fig. 2 experiment recipe (shared with examples/fl_cifar_fwq.py).
 
-    def batch_fn(r, cohort):
-        x, y = batcher.sample_round(r, cohort)
-        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
-
-    # held-out eval
-    eimgs, elabels = SyntheticImages(n=512, hw=16, seed=seed + 999).generate()
-    ebatch = {"x": jnp.asarray(eimgs), "y": jnp.asarray(elabels)}
-
-    out = orch.run(sim, batch_fn,
-                   eval_fn=lambda s: s.evaluate(loss, ebatch), eval_every=10)
+    Error tolerance sized so the budget admits ~half the cohort at 8 bits
+    (lambda = 0.5 * e2 * d * delta_8^2; see constraint (23)).
+    """
+    spec = RunSpec(
+        arch=model_kind, workload="fl-sim", rounds=rounds, seed=seed,
+        batch=16,
+        options={"scheme": scheme, "n_clients": n_clients, "lr": 0.2,
+                 "error_tolerance": 4.5, "eval_every": 10})
+    out = Session(spec).run()
     final_eval = out["evals"][-1] if out["evals"] else {"acc": float("nan")}
     return {
         "scheme": scheme,

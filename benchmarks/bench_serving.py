@@ -20,13 +20,17 @@ PROMPT = 8
 
 
 def main():
-    from repro.launch.serve import run_serve
+    from repro.api import PrecisionPolicy, RunSpec, Session
 
     rows = {}
     for bits, tag in ((32, "f32"), (7, "int8")):
-        stats = run_serve(ARCH, smoke=True, steps=STEPS, batch=BATCH,
-                          s_max=S_MAX, prompt_len=PROMPT, serve_bits=bits,
-                          attn_impl="ref", quiet=True)
+        precision = (PrecisionPolicy.lazy_int8(bits) if bits < 32
+                     else PrecisionPolicy.full_precision())
+        spec = RunSpec(arch=ARCH, workload="serve", smoke=True, batch=BATCH,
+                       seq=S_MAX, precision=precision,
+                       options={"steps": STEPS, "prompt_len": PROMPT,
+                                "attn_impl": "ref", "quiet": True})
+        stats = Session(spec).serve()
         rows[tag] = stats
         us_per_step = stats.wall_s / max(stats.decode_steps, 1) * 1e6
         emit(f"serving_{ARCH}_smoke_{tag}", us_per_step,

@@ -15,10 +15,13 @@ from repro.core.primal import PrimalData, _round_tmin
 
 def codesign_instance(n=10, rounds=4, seed=0, b_max=20e6, grad_mb=1.25,
                       group_step_mhz=5.0, t_factor=1.15, frac_8=0.4,
-                      cap_lo_frac=0.5, cap_hi_frac=1.5):
+                      cap_lo_frac=0.5, cap_hi_frac=1.5, policy=None):
     """A (PrimalData, MasterSpec, fleet, channel, comm) tuple like the paper's
     simulation setting (§5.1): N0=-174dBm, 2-20dBm tx power, heterogeneous
-    fleet in 4 compute groups, non-trivial memory limits."""
+    fleet in 4 compute groups, non-trivial memory limits.
+
+    ``policy`` (:class:`repro.api.PrecisionPolicy`) supplies the bit lattice
+    the master searches; defaults to the paper's (8, 16, 32)."""
     fleet = heterogeneous_fleet(n, seed=seed, group_step_mhz=group_step_mhz)
     ch = ChannelModel(n_devices=n, seed=seed)
     comm = CommParams(b_max_hz=b_max, grad_bytes=grad_mb * 1e6)
@@ -37,7 +40,11 @@ def codesign_instance(n=10, rounds=4, seed=0, b_max=20e6, grad_mb=1.25,
                       t_max=float(t_factor * tmin32.sum()))
     caps = memory_capacities(n, lo_mb=grad_mb * cap_lo_frac,
                              hi_mb=grad_mb * cap_hi_frac) * 1e6
-    spec = MasterSpec(bits_options=(8, 16, 32), n_devices=n,
+    if policy is None:
+        from repro.api.precision import PrecisionPolicy
+
+        policy = PrecisionPolicy()
+    spec = MasterSpec(bits_options=policy.bit_options, n_devices=n,
                       error_budget=1.0, mem_capacity_bytes=caps,
                       model_bytes_fp=grad_mb * 1e6)
     # Error budget (constraint 23): bind hard enough that only ~frac_8 of the

@@ -1,5 +1,7 @@
 """Paper reproduction driver (Fig. 2): FWQ vs Full-Precision / Unified-Q /
-Rand-Q on the CIFAR-class CNN, with accuracy + energy reporting.
+Rand-Q on the CIFAR-class CNN, with accuracy + energy reporting.  The shared
+recipe (`benchmarks.bench_convergence.run_scheme`) is one fl-sim RunSpec per
+scheme through the `repro.api` facade.
 
 Run:  PYTHONPATH=src python examples/fl_cifar_fwq.py [--rounds 60]
 """

@@ -1,15 +1,17 @@
 """FWQ federated training of an assigned LM architecture on the pod-style
-trainer (shard_map path) — smoke-scale so it runs on CPU.
+trainer (shard_map path) via the `repro.api` facade — smoke-sized for CPU.
 
 This is the same code path the 16x16 dry-run compiles at production scale:
-per-client quantization happens inline in the layers (transient, FSDP-aware).
+per-client quantization happens inline in the layers (transient, FSDP-aware),
+and each round's per-client bit-widths arrive as a PrecisionPolicy from the
+GBD co-design.
 
 Run:  PYTHONPATH=src python examples/lm_federated_pod.py --arch glm4-9b
 """
 
 import argparse
 
-from repro.launch import train as train_mod
+from repro.api import RunSpec, Session
 
 
 def main():
@@ -19,13 +21,12 @@ def main():
     ap.add_argument("--scheme", default="fwq")
     args = ap.parse_args()
 
-    history = train_mod.main([
-        "--arch", args.arch, "--smoke",
-        "--rounds", str(args.rounds),
-        "--mesh", "1x1",
-        "--batch", "2", "--seq", "32",
-        "--scheme", args.scheme,
-    ])
+    spec = RunSpec(
+        arch=args.arch, workload="fl-orchestrate", mesh="1x1", smoke=True,
+        batch=2, seq=32, rounds=args.rounds,
+        options={"scheme": args.scheme, "lr": 0.05},
+    )
+    history = Session(spec).run()
     losses = [h["loss"] for h in history]
     print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} rounds")
 

@@ -1,52 +1,30 @@
-"""Quickstart: 10 rounds of FWQ federated learning in ~a minute on CPU.
+"""Quickstart: 10 rounds of FWQ federated learning in ~a minute on CPU —
+through the `repro.api` front door.
 
-Demonstrates the paper's core loop end to end:
+One RunSpec + Session stands up the paper's core loop end to end:
   * heterogeneous clients quantize the global model with their own bit-widths
     (stochastic rounding, Eq. 1),
   * gradients are computed AT the quantized weights (Algorithm 1),
   * the server aggregates and updates in full precision,
   * the GBD co-design picks the bit-widths/bandwidth from the simulated 5G
-    channel + device energy models.
+    channel + device energy models each round, and hands them to the trainer
+    as a per-device PrecisionPolicy (PrecisionPolicy.from_gbd).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.energy import heterogeneous_fleet, memory_capacities
-from repro.data import ClientBatcher, SyntheticImages, dirichlet_partition
-from repro.fed import FLOrchestrator, FLSimulation, OrchestratorConfig, SimConfig
-from repro.models.cnn import mobilenet, xent_loss
+from repro.api import RunSpec, Session
 
 
 def main():
-    n_clients, rounds = 8, 10
-
-    # 1. model + loss (a MobileNet-style CIFAR net, as in the paper's eval)
-    model = mobilenet(width=8, n_stages=2)
-    loss = xent_loss(model)
-
-    # 2. non-iid client data
-    imgs, labels = SyntheticImages(n=2048, hw=16).generate()
-    parts = dirichlet_partition(labels, n_clients, alpha=0.5)
-    batcher = ClientBatcher(imgs, labels, parts, batch=16)
-
-    # 3. FL simulator (Algorithm 1) + co-design orchestrator (GBD, §4)
-    sim = FLSimulation(loss, model.init, SimConfig(n_clients=n_clients, lr=0.08))
-    fleet = heterogeneous_fleet(n_clients, group_step_mhz=5.0)
-    caps = memory_capacities(n_clients, lo_mb=2.0, hi_mb=8.0) * 1e6
-    orch = FLOrchestrator(
-        OrchestratorConfig(n_devices=n_clients, n_rounds=rounds,
-                           scheme="fwq", model_dim_d=1 << 16,
-                           error_tolerance=4.5),
-        fleet, caps, grad_bytes=1e6)
-
-    def batch_fn(r, cohort):
-        x, y = batcher.sample_round(r, cohort)
-        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
-
-    out = orch.run(sim, batch_fn)
+    spec = RunSpec(
+        arch="mobilenet",            # the paper's CIFAR-class CNN
+        workload="fl-sim",           # vmap simulator of Algorithm 1
+        rounds=10,
+        batch=16,
+        options={"scheme": "fwq", "n_clients": 8, "lr": 0.08},
+    )
+    out = Session(spec).run()
 
     print(f"\n{'round':>5} {'loss':>8} {'energy(J)':>10} {'bits chosen':>16}")
     for h, e in zip(out["history"], out["energy_log"]):

@@ -1,12 +1,13 @@
-"""Quantized serving example: pack a model to int8 (QTensor) and decode a
-batch of requests — the storage/bandwidth side of the paper's co-design.
+"""Quantized serving example via the `repro.api` facade: pack a model to int8
+(QTensor, lazy kernel-path dequant) and decode a batch of requests — the
+storage/bandwidth side of the paper's co-design.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py --arch yi-6b
 """
 
 import argparse
 
-from repro.launch import serve as serve_mod
+from repro.api import PrecisionPolicy, RunSpec, Session
 
 
 def main():
@@ -14,14 +15,17 @@ def main():
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--bits", type=int, default=7)
     args = ap.parse_args()
 
-    serve_mod.main([
-        "--arch", args.arch, "--smoke",
-        "--steps", str(args.steps),
-        "--batch", str(args.batch),
-        "--s-max", "64",
-    ])
+    spec = RunSpec(
+        arch=args.arch, workload="serve", smoke=True,
+        batch=args.batch, seq=64,
+        precision=PrecisionPolicy.lazy_int8(args.bits),
+        options={"steps": args.steps, "prompt_len": 8},
+    )
+    stats = Session(spec).serve()
+    print(f"\npacked/f32 weight-byte ratio: {stats.packed_vs_f32:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,42 @@
+"""``python -m repro`` — one dispatcher for every workload CLI.
+
+Usage::
+
+    python -m repro train  --arch yi-6b --smoke --rounds 5
+    python -m repro serve  --arch yi-6b --smoke --steps 16
+    python -m repro dryrun --arch mamba2-780m --shape train_4k
+    python -m repro fl     --model mobilenet --rounds 10
+
+Each subcommand is a thin CLI over :class:`repro.api.Session`; the
+installed console scripts (``repro-train``, ``repro-serve``,
+``repro-dryrun``, ``repro-fl``) map to the same entry points.
+"""
+
+from __future__ import annotations
+
+import sys
+
+_COMMANDS = ("train", "serve", "dryrun", "fl")
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 0
+    cmd, rest = argv[0], argv[1:]
+    if cmd not in _COMMANDS:
+        print(f"unknown command {cmd!r}; options: {', '.join(_COMMANDS)}",
+              file=sys.stderr)
+        return 2
+    # import late: repro.launch.dryrun must set XLA_FLAGS before jax
+    # initializes its backend, and the other CLIs defer jax themselves.
+    import importlib
+
+    mod = importlib.import_module(f"repro.launch.{cmd}")
+    mod.main(rest)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+"""repro.api — the one front door.
+
+* :class:`RunSpec` — declarative description of a workload run (arch, mesh,
+  workload kind, seed, precision); round-trips through dicts/JSON.
+* :class:`PrecisionPolicy` — unified per-tensor-role bit assignment
+  (weights / grads / kv-cache / comm) spanning FL co-design and serving;
+  ``PrecisionPolicy.from_gbd`` is how the optimizer's chosen bits enter
+  the stack.
+* :class:`Session` — owns mesh/AxisCtx/model/checkpoints and launches all
+  five workload kinds (train, serve, dryrun, fl-sim, fl-orchestrate).
+"""
+
+from repro.api.precision import PrecisionPolicy, ROLES  # noqa: F401
+from repro.api.session import ServeStats, Session  # noqa: F401
+from repro.api.spec import RunSpec, SIM_ARCHS, WORKLOADS  # noqa: F401

@@ -1,0 +1,722 @@
+"""Session: the one front door for every workload.
+
+``Session(RunSpec(...))`` owns the mesh, :class:`AxisCtx`, model,
+``ParamCtx`` construction, and checkpoint manager, and exposes the five
+workload kinds behind one API::
+
+    from repro.api import PrecisionPolicy, RunSpec, Session
+
+    stats = Session(RunSpec("yi-6b", workload="serve",
+                            precision=PrecisionPolicy.lazy_int8())).run()
+
+Per-workload ``options`` keys:
+
+* ``train`` / ``fl-orchestrate`` — ``scheme`` (fl-orchestrate only), ``lr``,
+  ``ckpt_dir``, ``out``, ``quiet``.
+* ``serve`` — ``steps``, ``s_max``, ``prompt_len``, ``attn_impl``,
+  ``requests``, ``max_new``, ``quiet``.
+* ``dryrun`` — ``shape``, ``variant`` (gather_bf16 / capacity / no_remat),
+  ``out``.
+* ``fl-sim`` — ``scheme``, ``n_clients``, ``lr``, ``error_tolerance``,
+  ``eval_every``, ``quiet``.
+
+The ``train`` workload runs federated rounds at the spec's FIXED
+:class:`PrecisionPolicy`; ``fl-orchestrate`` is the paper's full loop — every
+round the GBD co-design emits a fresh per-device policy
+(``PrecisionPolicy.from_gbd``) that drives the same traced-delta train step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import logging
+import time
+
+import numpy as np
+
+from repro.api.precision import PrecisionPolicy
+from repro.api.spec import RunSpec, SIM_ARCHS
+
+log = logging.getLogger("repro.api")
+
+BOS_ID = 1
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """What one driver run measured (bench_serving / tests consume this)."""
+
+    arch: str
+    bits: int
+    attn_impl: str
+    decode_steps: int
+    decoded_tokens: int          # tokens produced by ACTIVE slots only
+    completed: int               # sequences finished
+    admitted: int                # sequences admitted (>= batch when the
+                                 # queue forced mid-flight admissions)
+    wall_s: float                # decode-loop wall clock (post-compile)
+    tok_s: float
+    bytes_per_step_packed: int   # weight bytes streamed per decode step
+    bytes_per_step_f32: int      # same weights at f32
+    packed_vs_f32: float         # packed / f32 byte ratio
+    sample: list                 # first finished sequence's tokens
+
+
+def _weight_bytes(tree) -> int:
+    import jax
+
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+class Session:
+    """Owns mesh + axes + model + precision plumbing for one RunSpec."""
+
+    def __init__(self, spec: RunSpec):
+        self.spec = spec
+        self._train_state: dict | None = None
+
+    # -- lazily-built shared structure ----------------------------------
+    @functools.cached_property
+    def policy(self) -> PrecisionPolicy:
+        return self.spec.precision
+
+    @functools.cached_property
+    def cfg(self):
+        from repro.configs import get_config, smoke_variant
+
+        if self.spec.arch in SIM_ARCHS:
+            raise ValueError(f"{self.spec.arch!r} is an fl-sim architecture; "
+                             "the model-zoo config registry does not apply")
+        cfg = get_config(self.spec.arch)
+        return smoke_variant(cfg) if self.spec.smoke else cfg
+
+    @functools.cached_property
+    def model(self):
+        from repro.models.model import build_model
+
+        return build_model(self.cfg)
+
+    @functools.cached_property
+    def _mesh_and_axes(self):
+        from repro.launch.mesh import mesh_and_axes, parse_mesh
+
+        shape, _ = parse_mesh(self.spec.mesh)   # spec errors surface as-is
+        if self.spec.workload == "dryrun":
+            # AOT lowering needs the full device grid to exist as fake host
+            # devices.  XLA reads the flag at backend init, so set it here —
+            # before the first device query — rather than relying on the CLI
+            # shim's import-time environ write.
+            import os
+
+            need = int(np.prod(shape))
+            flags = os.environ.get("XLA_FLAGS", "")
+            if "xla_force_host_platform_device_count" not in flags:
+                os.environ["XLA_FLAGS"] = (
+                    f"{flags} --xla_force_host_platform_device_count={need}"
+                ).strip()
+        try:
+            return mesh_and_axes(self.spec.mesh)
+        except ValueError as e:
+            raise ValueError(
+                f"mesh {self.spec.mesh!r} needs more devices than this "
+                "process has (jax already initialized its backend?); start a "
+                "fresh process or export XLA_FLAGS="
+                "--xla_force_host_platform_device_count=<n> first") from e
+
+    @property
+    def mesh(self):
+        return self._mesh_and_axes[0]
+
+    @property
+    def axes(self):
+        return self._mesh_and_axes[1]
+
+    @functools.cached_property
+    def ckpt(self):
+        from repro.ckpt import CheckpointManager
+
+        ckpt_dir = self.spec.opt("ckpt_dir", "")
+        every = int(self.spec.opt("ckpt_every", 10))
+        return CheckpointManager(ckpt_dir, every=every) if ckpt_dir else None
+
+    def train_config(self):
+        from repro.configs.base import TrainConfig
+
+        return TrainConfig(
+            learning_rate=float(self.spec.opt("lr", 0.05)),
+            seed=self.spec.seed,
+            grad_compression_bits=self.policy.grad_compression_bits)
+
+    # -- primitive builders ---------------------------------------------
+    def init_params(self, key=None):
+        import jax
+
+        from repro.launch.steps import build_init_fn
+
+        init_fn, _ = build_init_fn(self.model, self.mesh, self.axes)
+        return init_fn(key if key is not None
+                       else jax.random.PRNGKey(self.spec.seed))
+
+    def train_step(self, opt=None, *, attn_impl: str = "auto",
+                   donate: bool = False):
+        """Policy-driven :class:`~repro.launch.steps.TrainStep` builder."""
+        from repro.launch.steps import build_train_step
+        from repro.optim import build_optimizer
+
+        tc = self.train_config()
+        if opt is None:
+            opt = build_optimizer("sgd", tc.learning_rate)
+        return build_train_step(self.model, self.mesh, self.axes, opt, tc,
+                                attn_impl=attn_impl, donate=donate)
+
+    # -- workload dispatch ----------------------------------------------
+    def run(self):
+        wl = self.spec.workload
+        if wl in ("train", "fl-orchestrate"):
+            return self.run_train()
+        if wl == "serve":
+            return self.serve()
+        if wl == "dryrun":
+            return self.run_dryrun()
+        if wl == "fl-sim":
+            return self.run_fl_sim()
+        raise ValueError(wl)  # unreachable: RunSpec validates
+
+    # ------------------------------------------------------------------
+    # train / fl-orchestrate: the pod FWQ-FL loop
+    # ------------------------------------------------------------------
+    def _ensure_train_state(self) -> dict:
+        if self._train_state is not None:
+            return self._train_state
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.energy import heterogeneous_fleet, memory_capacities
+        from repro.data.pipeline import TokenBatcher
+        from repro.data.synthetic import SyntheticTokens
+        from repro.fed.orchestrator import FLOrchestrator, OrchestratorConfig
+        from repro.optim import build_optimizer
+
+        spec, cfg = self.spec, self.cfg
+        tc = self.train_config()
+        opt = build_optimizer("sgd", tc.learning_rate)
+        ts = self.train_step(opt, donate=False)
+        n_clients = ts.n_clients
+        B = n_clients * spec.batch
+
+        params = self.init_params()
+        opt_state = opt.init(params)
+
+        tokens = SyntheticTokens(n_tokens=300_000, vocab=cfg.vocab_size,
+                                 seed=spec.seed).generate()
+        batcher = TokenBatcher(tokens, spec.seq, seed=spec.seed)
+
+        orch = None
+        if spec.workload == "fl-orchestrate":
+            fleet = heterogeneous_fleet(n_clients, seed=spec.seed,
+                                        group_step_mhz=5.0)
+            caps = memory_capacities(n_clients, lo_mb=8, hi_mb=64) * 1e6
+            n_params = cfg.param_count()
+            orch = FLOrchestrator(
+                OrchestratorConfig(n_devices=n_clients, n_rounds=spec.rounds,
+                                   scheme=spec.opt("scheme", "fwq"),
+                                   model_dim_d=n_params,
+                                   precision=self.policy, seed=spec.seed),
+                fleet, caps, grad_bytes=4.0 * n_params)
+
+        step = ts.fn(self.model.train_batch_spec(B, spec.seq))
+        start = 0
+        if self.ckpt:
+            state, start, _ = self.ckpt.restore_or({"p": params, "o": opt_state})
+            if start:
+                params, opt_state = state["p"], state["o"]
+                log.info("resumed at round %d", start)
+
+        self._train_state = dict(
+            jax=jax, jnp=jnp, opt=opt, step=step, params=params,
+            opt_state=opt_state, batcher=batcher, orch=orch,
+            n_clients=n_clients, B=B, start=start, history=[])
+        return self._train_state
+
+    def fl_round(self, r: int) -> dict:
+        """One federated round: per-round policy -> traced delta -> step.
+
+        Under ``fl-orchestrate`` the round's :class:`PrecisionPolicy` comes
+        from the GBD co-design (``plan["policy"]``, built via
+        ``PrecisionPolicy.from_gbd``); under ``train`` the spec's fixed
+        policy applies every round.
+        """
+        st = self._ensure_train_state()
+        jax, jnp = st["jax"], st["jnp"]
+        spec, cfg = self.spec, self.cfg
+        n_clients, B = st["n_clients"], st["B"]
+
+        plan = st["orch"].plan_round(r) if st["orch"] is not None else None
+        policy = plan["policy"] if plan is not None else self.policy
+        bits = policy.bits_vector(n_clients)
+
+        raw = st["batcher"].sample_round(r, n_clients, spec.batch)
+        batch = {
+            "tokens": jnp.asarray(raw["tokens"].reshape(B, spec.seq)),
+            "labels": jnp.asarray(raw["labels"].reshape(B, spec.seq)),
+        }
+        if cfg.family == "vlm":
+            batch["images"] = jnp.zeros((B, cfg.n_image_tokens,
+                                         cfg.d_frontend), jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((B, spec.seq, cfg.d_frontend),
+                                        jnp.float32)
+        delta = policy.delta(n_clients)
+        t0 = time.time()
+        st["params"], st["opt_state"], m = st["step"](
+            st["params"], st["opt_state"], batch, delta,
+            jax.random.fold_in(jax.random.PRNGKey(spec.seed), r))
+        rec = {"round": r, "loss": float(m["loss"]),
+               "bits": bits.tolist(),
+               "energy_j": plan["energy_round"] if plan else 0.0,
+               "t_round_s": plan["t_round"] if plan else 0.0,
+               "wall_s": round(time.time() - t0, 3),
+               "cohort": int(plan["cohort"].sum()) if plan else n_clients}
+        st["history"].append(rec)
+        if self.ckpt:
+            self.ckpt.maybe_save(r + 1, {"p": st["params"],
+                                         "o": st["opt_state"]})
+        return rec
+
+    def run_train(self) -> list[dict]:
+        st = self._ensure_train_state()
+        quiet = bool(self.spec.opt("quiet", False))
+        for r in range(st["start"], self.spec.rounds):
+            rec = self.fl_round(r)
+            if not quiet:
+                log.info("round %d loss=%.4f bits=%s energy=%.2fJ",
+                         r, rec["loss"], sorted(set(rec["bits"])),
+                         rec["energy_j"])
+        history = st["history"]
+        total_e = sum(h["energy_j"] for h in history)
+        if not quiet and history:
+            scheme = (self.spec.opt("scheme", "fwq")
+                      if self.spec.workload == "fl-orchestrate" else "fixed")
+            print(f"\nscheme={scheme} rounds={len(history)} "
+                  f"final_loss={history[-1]['loss']:.4f} "
+                  f"total_energy={total_e:.2f}J")
+        out = self.spec.opt("out", "")
+        if out:
+            with open(out, "w") as f:
+                json.dump(history, f, indent=1)
+        return history
+
+    # ------------------------------------------------------------------
+    # serve: continuous-batching quantized decode driver
+    # ------------------------------------------------------------------
+    def serve(self, **overrides) -> ServeStats:
+        """Drive the continuous-batching decode loop; returns ServeStats.
+
+        Weight precision comes from the session policy: ``packed`` policies
+        store int8/int16 ``QTensor`` codes, and ``policy.lazy`` keeps them
+        packed through the ``quant_matmul`` kernel path.  ``overrides`` patch
+        individual options (steps, requests, ...) for this call only.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.quantization import default_exempt
+        from repro.launch.steps import (
+            build_cached_prefill, build_decode_step, init_global_caches)
+        from repro.models.common import pack_params_for_policy
+
+        spec, policy = self.spec, self.policy
+        o = dict(spec.options)
+        o.update(overrides)
+        steps = int(o.get("steps", 16))
+        batch = spec.batch
+        s_max = int(o.get("s_max", spec.seq))
+        prompt_len = min(int(o.get("prompt_len", 8)), s_max)
+        attn_impl = o.get("attn_impl", "ref")
+        requests = o.get("requests")
+        max_new = o.get("max_new")
+        quiet = bool(o.get("quiet", False))
+        seed = spec.seed
+
+        if attn_impl not in ("ref", "flash"):
+            raise ValueError(f"attn_impl must be 'ref' or 'flash', "
+                             f"got {attn_impl!r}")
+        impl = "auto" if attn_impl == "ref" else "flash"
+
+        def say(msg):
+            if not quiet:
+                print(msg)
+
+        cfg, model, mesh, axes = self.cfg, self.model, self.mesh, self.axes
+        params = self.init_params()
+
+        # ---- pack to the policy's storage (norm/router exemptions as in
+        # training) ------------------------------------------------------
+        raw_bytes = _weight_bytes(params)
+        f32_bytes = sum(x.size * 4 for x in jax.tree_util.tree_leaves(params))
+        serve_bits = policy.serve_bits
+        qparams = pack_params_for_policy(params, policy, jax.random.PRNGKey(1),
+                                         exempt=default_exempt)
+        q_bytes = _weight_bytes(qparams)
+        if policy.packed:
+            say(f"params: {raw_bytes/1e6:.1f} MB f32 -> {q_bytes/1e6:.1f} MB "
+                f"packed ({raw_bytes/q_bytes:.2f}x smaller, bits={serve_bits})")
+        else:
+            say(f"params: {raw_bytes/1e6:.1f} MB f32 (unpacked baseline)")
+
+        # ---- compiled steps ---------------------------------------------
+        ptree = jax.eval_shape(lambda: qparams)
+        ss = build_decode_step(model, mesh, axes, params_tree=ptree,
+                               s_max=s_max, batch_global=batch, policy=policy)
+        pf = build_cached_prefill(model, mesh, axes, params_tree=ptree,
+                                  s_max=s_max, s_prompt=prompt_len,
+                                  batch_global=batch, attn_impl=impl,
+                                  policy=policy, bos_id=BOS_ID)
+        caches = init_global_caches(model, mesh, axes, s_max=s_max,
+                                    batch_global=batch,
+                                    dtype=policy.kv_cache_dtype())
+
+        # ---- synthetic request queue ------------------------------------
+        budget = s_max - prompt_len - 1
+        n_requests = requests if requests is not None else 2 * batch
+        rng = np.random.RandomState(seed)
+        # default cap: ~half the step budget, so completions (and therefore
+        # mid-flight admissions) actually happen within a demo-sized run
+        cap = max_new if max_new is not None else max(2, steps // 2)
+        cap = max(1, min(cap, budget))
+        queue = [
+            {"id": i,
+             "prompt": rng.randint(2, cfg.vocab_size, size=(prompt_len,)),
+             # staggered lengths so completions (and admissions) interleave
+             "max_new": int(rng.randint(max(1, cap // 2), cap + 1))}
+            for i in range(n_requests)
+        ]
+        needs_tokens = "tokens" in model.prefill_batch_spec(batch, prompt_len,
+                                                           s_max)
+        d_front = cfg.d_frontend or cfg.d_model
+        n_img = cfg.n_image_tokens or 1601
+
+        def prefill_batch(slots_to_fill):
+            """Assemble the (B, ...) prefill inputs; only masked slots matter."""
+            b = {}
+            if needs_tokens:
+                toks = np.ones((batch, prompt_len), np.int32)
+                for s, req in slots_to_fill:
+                    toks[s] = req["prompt"]
+                b["tokens"] = jnp.asarray(toks)
+            if cfg.family == "vlm":
+                key = jax.random.PRNGKey(seed + 101)
+                b["images"] = jax.random.normal(key, (batch, n_img, d_front),
+                                                jnp.float32)
+            if cfg.family == "encdec":
+                key = jax.random.PRNGKey(seed + 102)
+                b["frames"] = jax.random.normal(key, (batch, s_max, d_front),
+                                                jnp.float32)
+            return b
+
+        # ---- slot state (host side) -------------------------------------
+        active = np.zeros((batch,), bool)
+        remaining = np.zeros((batch,), np.int64)
+        seqs = [[] for _ in range(batch)]
+        finished = []
+        cur_tok = jnp.full((batch, 1), BOS_ID, jnp.int32)
+        admitted = completed = decoded = 0
+
+        def admit():
+            nonlocal caches, cur_tok, admitted
+            free = [i for i in range(batch) if not active[i]]
+            if not free or not queue:
+                return
+            fill = [(s, queue.pop(0)) for s in free[: len(queue)]]
+            mask = np.zeros((batch,), bool)
+            for s, req in fill:
+                mask[s] = True
+            tok, caches = pf.fn(qparams, prefill_batch(fill), caches,
+                                jnp.asarray(mask))
+            tok = np.asarray(tok)
+            new_tok = np.array(cur_tok)
+            for s, req in fill:
+                active[s] = True
+                remaining[s] = req["max_new"]
+                seqs[s] = [int(tok[s, 0])]
+                new_tok[s] = tok[s]
+                admitted += 1
+            cur_tok = jnp.asarray(new_tok)
+
+        admit()
+        # first call compiles; its output is a real decode step, consumed below
+        tok, caches = ss.fn(qparams, {"token": cur_tok}, caches)
+        tok_h = np.asarray(tok)               # sync: compile finishes here
+        t0, step_i, decoded_at_t0 = time.time(), 1, 0
+        while True:
+            done_any = False
+            for s in range(batch):
+                if not active[s]:
+                    continue
+                seqs[s].append(int(tok_h[s, 0]))
+                decoded += 1
+                remaining[s] -= 1
+                if remaining[s] <= 0 or len(seqs[s]) >= budget:
+                    active[s] = False
+                    finished.append(seqs[s])
+                    completed += 1
+                    done_any = True
+            if step_i == 1:
+                decoded_at_t0 = decoded       # step 1 ran pre-timer (compile)
+            if step_i >= steps or (not active.any() and not queue):
+                break
+            cur_tok = jnp.asarray(tok_h)      # each slot feeds its own last token
+            if done_any and queue:
+                admit()                       # mid-flight slot reuse: overwrites
+                                              # the admitted slots in cur_tok
+            tok, caches = ss.fn(qparams, {"token": cur_tok}, caches)
+            tok_h = np.asarray(tok)
+            step_i += 1
+        wall = time.time() - t0
+
+        stats = ServeStats(
+            arch=self.spec.arch, bits=serve_bits, attn_impl=attn_impl,
+            decode_steps=step_i, decoded_tokens=decoded, completed=completed,
+            admitted=admitted, wall_s=wall,
+            tok_s=(decoded - decoded_at_t0) / max(wall, 1e-9),
+            bytes_per_step_packed=q_bytes, bytes_per_step_f32=f32_bytes,
+            packed_vs_f32=q_bytes / max(f32_bytes, 1),
+            sample=(finished[0] if finished else seqs[0])[:16],
+        )
+        say(f"decoded {stats.decoded_tokens} tokens over {stats.decode_steps} "
+            f"steps x {batch} slots in {wall:.3f}s = {stats.tok_s:.1f} tok/s "
+            f"(interpret-mode numbers off-TPU)")
+        say(f"admitted {stats.admitted} / completed {stats.completed} sequences "
+            f"(continuous batching over {n_requests} requests)")
+        say(f"weight stream: {q_bytes/1e6:.1f} MB/step packed vs "
+            f"{f32_bytes/1e6:.1f} MB/step f32 -> ratio {stats.packed_vs_f32:.3f}")
+        say(f"sample: {stats.sample}")
+        return stats
+
+    # ------------------------------------------------------------------
+    # dryrun: AOT lower + compile + roofline
+    # ------------------------------------------------------------------
+    def lower(self, shape=None, variant: dict | None = None):
+        """AOT-lower + compile one (arch x shape) cell on this mesh.
+
+        ``shape``: a shape-cell name from ``repro.configs.shapes_for`` or an
+        explicit :class:`~repro.configs.base.ShapeSpec`.  Packed serving
+        weights come from the session policy (``policy.packed``), not a knob.
+        Returns ``(compiled, lowered, meta)``.
+        """
+        import dataclasses as _dc
+
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.configs import shapes_for
+        from repro.configs.base import ShapeSpec
+        from repro.dist.sharding import batch_specs
+        from repro.launch.mesh import batch_size
+        from repro.launch.steps import (
+            build_decode_step, build_prefill_step, globalize,
+            local_param_shapes, serving_axes)
+        from repro.models.model import build_model
+        from repro.optim import build_optimizer
+
+        variant = dict(variant or self.spec.opt("variant") or {})
+        spec = self.spec
+        shape = shape if shape is not None else spec.opt("shape")
+        cfg = self.cfg
+        if variant.get("gather_bf16"):
+            cfg = _dc.replace(cfg, fsdp_gather_dtype="bfloat16")
+        if variant.get("capacity"):
+            cfg = _dc.replace(cfg, capacity_factor=float(variant["capacity"]))
+        if variant.get("no_remat"):
+            cfg = _dc.replace(cfg, remat=False)
+        model = build_model(cfg)
+        if isinstance(shape, ShapeSpec):
+            cell = shape
+        else:
+            cell = {s.name: s for s in shapes_for(cfg)}[shape]
+        mesh, axes = self.mesh, self.axes
+        rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                       sharding=NamedSharding(mesh, P()))
+
+        def _bf16(dt):
+            return jnp.bfloat16 if jnp.issubdtype(dt, jnp.floating) else dt
+
+        if cell.kind == "train":
+            opt = build_optimizer("sgd", 1e-3)
+            tc = self.train_config()
+            from repro.launch.steps import build_train_step
+
+            ts = build_train_step(model, mesh, axes, opt, tc, donate=False)
+            pshapes = local_param_shapes(model, mesh, axes)
+            params_g = globalize(pshapes, ts.param_specs, mesh)
+            opt_shapes = jax.eval_shape(opt.init, pshapes)
+            opt_g = globalize(opt_shapes, ts.opt_specs, mesh)
+            batch_tree = model.train_batch_spec(cell.global_batch, cell.seq_len)
+            bspecs = batch_specs(batch_tree, axes)
+            batch_g = globalize(
+                jax.tree_util.tree_map(
+                    lambda l: jax.ShapeDtypeStruct(
+                        (l.shape[0] // batch_size(mesh, axes),) + l.shape[1:],
+                        l.dtype),
+                    batch_tree),
+                bspecs, mesh)
+            n_clients = ts.n_clients
+            delta_g = jax.ShapeDtypeStruct(
+                (n_clients,), jnp.float32,
+                sharding=NamedSharding(mesh, P(
+                    axes.batch_axes if len(axes.batch_axes) > 1
+                    else axes.batch_axes[0])))
+            step = ts.fn(batch_tree)
+            lowered = step.lower(params_g, opt_g, batch_g, delta_g, rng_sds)
+
+        elif cell.kind == "prefill":
+            wrap, pspecs = build_prefill_step(model, mesh, axes)
+            pshapes = local_param_shapes(model, mesh, axes)
+            params_g = globalize(pshapes, pspecs, mesh, dtype_map=_bf16)
+            batch_tree = model.train_batch_spec(cell.global_batch, cell.seq_len)
+            batch_tree = {k: v for k, v in batch_tree.items() if k != "labels"}
+            bspecs = batch_specs(batch_tree, axes)
+            batch_g = globalize(
+                jax.tree_util.tree_map(
+                    lambda l: jax.ShapeDtypeStruct(
+                        (l.shape[0] // batch_size(mesh, axes),) + l.shape[1:],
+                        l.dtype),
+                    batch_tree),
+                bspecs, mesh)
+            step = wrap(batch_tree)
+            lowered = step.lower(params_g, batch_g)
+
+        else:  # decode
+            sv_axes = serving_axes(axes, cell.global_batch, mesh)
+            params_tree = None
+            if self.policy.packed:
+                # packed serving weights (QTensor): gathers stream codes
+                from repro.models.common import pack_params_for_policy
+
+                pshapes_local = local_param_shapes(model, mesh, sv_axes)
+                params_tree = jax.eval_shape(
+                    lambda: pack_params_for_policy(
+                        jax.tree_util.tree_map(
+                            lambda l: jnp.zeros(l.shape, l.dtype),
+                            pshapes_local),
+                        self.policy, jax.random.PRNGKey(0)))
+            ss = build_decode_step(model, mesh, sv_axes, s_max=cell.seq_len,
+                                   batch_global=cell.global_batch,
+                                   params_tree=params_tree)
+            params_g = globalize(ss.param_shapes, ss.param_specs, mesh,
+                                 dtype_map=_bf16)
+            caches_g = globalize(ss.caches_shape, ss.cache_specs, mesh)
+            batch_tree = model.decode_batch_spec(cell.global_batch,
+                                                 cell.seq_len)
+            bspecs = batch_specs(batch_tree, sv_axes)
+            bsz = batch_size(mesh, sv_axes)
+            batch_g = globalize(
+                jax.tree_util.tree_map(
+                    lambda l: jax.ShapeDtypeStruct(
+                        (l.shape[0] // max(bsz, 1),) + l.shape[1:], l.dtype),
+                    batch_tree),
+                bspecs, mesh)
+            lowered = ss.fn.lower(params_g, batch_g, caches_g)
+
+        compiled = lowered.compile()
+        n_dev = int(np.prod(mesh.devices.shape))
+        meta = dict(arch=spec.arch, shape=cell.name, mesh=spec.mesh,
+                    n_devices=n_dev, kind=cell.kind, seq_len=cell.seq_len,
+                    global_batch=cell.global_batch)
+        return compiled, lowered, meta
+
+    def run_dryrun(self, shape=None, variant: dict | None = None,
+                   *, verbose: bool = True) -> dict:
+        """Lower+compile one cell and derive its roofline report dict."""
+        from repro.configs import shapes_for
+        from repro.configs.base import ShapeSpec
+        from repro.roofline.analysis import analyze_compiled, model_flops
+
+        t0 = time.time()
+        shape = shape if shape is not None else self.spec.opt("shape")
+        variant = dict(variant or self.spec.opt("variant") or {})
+        compiled, lowered, meta = self.lower(shape, variant)
+        if variant:
+            meta["variant"] = dict(variant)
+        cell = (shape if isinstance(shape, ShapeSpec)
+                else {s.name: s for s in shapes_for(self.cfg)}[meta["shape"]])
+        mf = model_flops(self.cfg, cell.kind, cell.seq_len, cell.global_batch)
+        rep = analyze_compiled(compiled, arch=meta["arch"], shape=meta["shape"],
+                               mesh_name=meta["mesh"],
+                               n_devices=meta["n_devices"],
+                               model_flops_global=mf)
+        d = rep.to_dict()
+        d.update(meta, compile_s=round(time.time() - t0, 1), status="ok")
+        if verbose:
+            print(f"[{meta['arch']} x {meta['shape']} x {meta['mesh']}] "
+                  f"compile={d['compile_s']}s  "
+                  f"compute={rep.compute_s:.3e}s memory={rep.memory_s:.3e}s "
+                  f"collective={rep.collective_s:.3e}s  "
+                  f"dominant={rep.dominant}  "
+                  f"useful={rep.useful_flops_ratio:.3f}")
+            print("  memory_analysis:", rep.memory_stats)
+            print("  collectives:",
+                  {k: v for k, v in rep.collective_breakdown.items()})
+        return d
+
+    # ------------------------------------------------------------------
+    # fl-sim: the paper's CIFAR-class experiment loop
+    # ------------------------------------------------------------------
+    def run_fl_sim(self) -> dict:
+        """FLSimulation (vmap Algorithm 1) + GBD orchestrator, CNN-scale."""
+        import jax.numpy as jnp
+
+        from repro.core.energy import heterogeneous_fleet, memory_capacities
+        from repro.data import (ClientBatcher, SyntheticImages,
+                                dirichlet_partition)
+        from repro.fed.orchestrator import FLOrchestrator, OrchestratorConfig
+        from repro.fed.simulation import FLSimulation, SimConfig
+        from repro.models.cnn import mobilenet, resnet, xent_loss
+
+        spec = self.spec
+        o = spec.options
+        n_clients = int(o.get("n_clients", 8))
+        seed = spec.seed
+        if spec.arch == "resnet":
+            model = resnet(depth_blocks=(1, 1), width=8)
+        elif spec.arch == "mobilenet":
+            model = mobilenet(width=8, n_stages=2)
+        else:
+            raise ValueError(f"fl-sim arch must be one of {SIM_ARCHS}, "
+                             f"got {spec.arch!r}")
+        loss = xent_loss(model)
+        sim = FLSimulation(loss, model.init,
+                           SimConfig(n_clients=n_clients,
+                                     lr=float(o.get("lr", 0.08)), seed=seed))
+        imgs, labels = SyntheticImages(n=2048, hw=16, seed=seed).generate()
+        parts = dirichlet_partition(labels, n_clients, alpha=0.5, seed=seed)
+        batcher = ClientBatcher(imgs, labels, parts, batch=spec.batch,
+                                seed=seed)
+        fleet = heterogeneous_fleet(n_clients, seed=seed, group_step_mhz=5.0)
+        caps = memory_capacities(n_clients, lo_mb=2.0, hi_mb=8.0) * 1e6
+        orch = FLOrchestrator(
+            OrchestratorConfig(
+                n_devices=n_clients, n_rounds=spec.rounds,
+                scheme=o.get("scheme", "fwq"),
+                model_dim_d=int(o.get("model_dim_d", 1 << 16)),
+                error_tolerance=float(o.get("error_tolerance", 4.5)),
+                precision=self.policy, seed=seed),
+            fleet, caps, grad_bytes=float(o.get("grad_bytes", 1e6)))
+
+        def batch_fn(r, cohort):
+            x, y = batcher.sample_round(r, cohort)
+            return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+        eval_every = int(o.get("eval_every", 0))
+        eval_fn = None
+        if eval_every:
+            eimgs, elabels = SyntheticImages(n=512, hw=16,
+                                             seed=seed + 999).generate()
+            ebatch = {"x": jnp.asarray(eimgs), "y": jnp.asarray(elabels)}
+            eval_fn = lambda s: s.evaluate(loss, ebatch)  # noqa: E731
+
+        return orch.run(sim, batch_fn, eval_fn=eval_fn, eval_every=eval_every)

@@ -166,8 +166,7 @@ class TrainConfig:
     n_rounds: int = 100
     microbatch: int = 0                # 0 = no microbatching
     seed: int = 0
-    # FWQ:
+    # FWQ (bit-width assignment lives in repro.api.PrecisionPolicy now):
     n_clients: int = 16
-    bits_options: tuple[int, ...] = (8, 16, 32)
     error_tolerance: float = 0.05      # lambda in constraint (23)
     grad_compression_bits: int = 0     # 0 = off (paper-faithful)

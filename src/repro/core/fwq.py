@@ -129,16 +129,25 @@ def make_fwq_round(
 
 
 def delta_for_clients(
-    bits: jnp.ndarray | list[int],
+    bits,
     *,
     scale: float | jnp.ndarray = 1.0,
+    n_clients: int | None = None,
 ) -> jnp.ndarray:
     """(n_clients,) resolutions ``s * Delta_{q_i}`` from a bit-width vector.
+
+    ``bits`` is a per-client bit vector, or a
+    :class:`repro.api.precision.PrecisionPolicy` (pass ``n_clients`` then —
+    the policy's ``weights`` role supplies the per-device bits).
 
     ``scale`` defaults to 1.0 because :func:`repro.core.quantization.sr_quantize`
     applies the per-tensor ``s = ||w||_inf`` internally; pass an explicit scale
     only for pre-normalized weight schemes.
     """
+    if hasattr(bits, "bits_vector"):  # PrecisionPolicy
+        if n_clients is None:
+            raise ValueError("delta_for_clients(policy) needs n_clients=")
+        bits = bits.bits_vector(n_clients)
     return (jnp.asarray(scale, jnp.float32)
             * quantlib.delta_from_bits(jnp.asarray(bits))).astype(jnp.float32)
 

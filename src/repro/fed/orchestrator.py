@@ -22,10 +22,12 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import warnings
 from typing import Callable
 
 import numpy as np
 
+from repro.api.precision import PrecisionPolicy
 from repro.ckpt import CheckpointManager
 from repro.core import baselines as baselines_mod
 from repro.core.channel import ChannelModel
@@ -43,7 +45,8 @@ class OrchestratorConfig:
     n_devices: int
     n_rounds: int
     scheme: str = "fwq"              # fwq | full_precision | unified_q | rand_q
-    bits_options: tuple = (8, 16, 32)
+    precision: PrecisionPolicy | None = None  # bit lattice + tensor roles
+    bits_options: tuple | None = None         # DEPRECATED: use precision
     unified_bits: int = 16
     b_max_hz: float = 20e6
     t_max_s: float = 0.0             # 0 => auto (t_factor x min feasible)
@@ -59,6 +62,24 @@ class OrchestratorConfig:
     ckpt_dir: str = ""
     ckpt_every: int = 25
 
+    def __post_init__(self):
+        if self.bits_options is not None:
+            warnings.warn(
+                "OrchestratorConfig(bits_options=...) is deprecated; pass "
+                "precision=PrecisionPolicy(bit_options=...)",
+                DeprecationWarning, stacklevel=3)
+            if (self.precision is not None
+                    and tuple(self.precision.bit_options)
+                    != tuple(self.bits_options)):
+                raise ValueError(
+                    f"conflicting bits_options={tuple(self.bits_options)} and "
+                    f"precision.bit_options={self.precision.bit_options}")
+            base = self.precision or PrecisionPolicy()
+            self.precision = dataclasses.replace(
+                base, bit_options=tuple(self.bits_options))
+        if self.precision is None:
+            self.precision = PrecisionPolicy()
+
 
 class FLOrchestrator:
     def __init__(self, cfg: OrchestratorConfig, fleet: list[DeviceProfile],
@@ -69,7 +90,7 @@ class FLOrchestrator:
         self.comm = CommParams(b_max_hz=cfg.b_max_hz, grad_bytes=grad_bytes)
         self.channel = ChannelModel(n_devices=cfg.n_devices, seed=cfg.seed)
         self.spec = MasterSpec(
-            bits_options=cfg.bits_options,
+            bits_options=cfg.precision.bit_options,
             n_devices=cfg.n_devices,
             error_budget=error_budget_bound(cfg.error_tolerance, cfg.e2,
                                             cfg.model_dim_d, cfg.n_devices),
@@ -118,7 +139,16 @@ class FLOrchestrator:
             res = baselines_mod.rand_q(data, self.spec, seed=self.cfg.seed + round_idx)
         else:
             raise ValueError(scheme)
-        self._strategy = {"q": res.q, "bandwidth": res.bandwidth,
+        # The solver's chosen bits enter the stack ONLY as a PrecisionPolicy:
+        # the same object the trainer's traced delta and the serving packer
+        # consume (per-device heterogeneous weights role).
+        policy = PrecisionPolicy.from_gbd(
+            res, comm=self.cfg.precision.comm,
+            kv_cache=self.cfg.precision.kv_cache,
+            bit_options=self.cfg.precision.bit_options)
+        self._strategy = {"policy": policy,
+                          "q": policy.bits_vector(self.cfg.n_devices),
+                          "bandwidth": res.bandwidth,
                           "t_rounds": res.t_rounds, "energy_plan": res.energy,
                           "resolved_at": round_idx}
         return self._strategy
@@ -156,7 +186,8 @@ class FLOrchestrator:
             cohort = alive if alive.any() else np.ones_like(alive)
 
         rec = {
-            "round": round_idx, "q": q.copy(), "bandwidth": B.copy(),
+            "round": round_idx, "policy": st["policy"],
+            "q": q.copy(), "bandwidth": B.copy(),
             "t_comp": t_comp, "t_comm": t_comm,
             "t_round": float(np.max(np.where(cohort, t_total, 0.0))),
             "e_comp": e_comp, "e_comm": e_comm,
@@ -182,7 +213,9 @@ class FLOrchestrator:
             plan = self.plan_round(r)
             cohort_idx = np.flatnonzero(plan["cohort"])
             batch = batch_fn(r, cohort_idx)
-            bits = plan["q"][cohort_idx]
+            # per-device bits reach the simulator only through the round's
+            # PrecisionPolicy (built by PrecisionPolicy.from_gbd in resolve)
+            bits = plan["policy"].bits_vector(self.cfg.n_devices)[cohort_idx]
             # elastic cohort: the simulator round is sized by the batch
             rec = sim.run_round(batch, bits)
             rec.update(energy=plan["energy_round"], t_round=plan["t_round"],

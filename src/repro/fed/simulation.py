@@ -54,8 +54,21 @@ class FLSimulation:
         self.params, self.opt_state = state["params"], state["opt"]
         self.round_idx = round_idx
 
-    def run_round(self, batch, bits: np.ndarray) -> dict:
-        """batch: leaves with leading dim n_clients; bits: (n_clients,) ints."""
+    def run_round(self, batch, bits) -> dict:
+        """batch: leaves with leading dim n_clients; bits: (n_clients,) ints
+        or a :class:`repro.api.precision.PrecisionPolicy` whose weights role
+        covers exactly this round's cohort."""
+        if hasattr(bits, "bits_vector"):  # PrecisionPolicy
+            n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            if bits.heterogeneous and len(bits.weights) != n:
+                # a device-indexed policy cannot be positionally mapped onto
+                # an elastic sub-cohort: the caller must select the cohort's
+                # bits itself (see FLOrchestrator.run)
+                raise ValueError(
+                    f"policy carries {len(bits.weights)} per-device bits but "
+                    f"the round batch has {n} clients; pass the cohort's own "
+                    "bits (policy.bits_vector(n_devices)[cohort_idx])")
+            bits = bits.bits_vector(n)
         delta = delta_for_clients(np.asarray(bits))
         rng = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), self.round_idx)
         self.params, self.opt_state, m = self._round(

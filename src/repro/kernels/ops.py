@@ -148,11 +148,37 @@ def dense_dispatch(x: jnp.ndarray, w) -> jnp.ndarray:
     return x @ w
 
 
+def expert_dispatch(x: jnp.ndarray, w, dtype=None) -> jnp.ndarray:
+    """Per-expert batched matmul ``x (E, C, K) @ w (E, K, N) -> (E, C, N)``.
+
+    A packed :class:`~repro.models.common.QTensor` expert stack routes every
+    expert's matmul through the ``quant_matmul`` Pallas kernel (the expert
+    count is static, so the loop unrolls into E kernel calls over the shared
+    per-layer scale) instead of eagerly dequantizing the whole stack; plain
+    arrays keep the dense einsum.  Falls back to eager dequant for the
+    per-sub-tensor-scale layouts the kernel's scalar-scale ABI cannot take.
+    """
+    if dtype is None:
+        dtype = x.dtype
+    if _is_qtensor(w):
+        if jnp.ndim(w.scale) == 0:
+            n_experts = w.codes.shape[0]
+            out = [quant_matmul(x[e], w.codes[e], w.scale)
+                   for e in range(n_experts)]
+            return jnp.stack(out).astype(dtype)
+        # per-expert scale row: eager dequant, scale broadcast over (C, N)
+        scale = jnp.reshape(w.scale.astype(jnp.float32),
+                            (-1,) + (1,) * (w.codes.ndim - 1))
+        dense = (w.codes.astype(jnp.float32) * scale).astype(dtype)
+        return jnp.einsum("eck,ekn->ecn", x.astype(dtype), dense)
+    return jnp.einsum("eck,ekn->ecn", x.astype(dtype), as_array(w, dtype))
+
+
 def as_array(w, dtype=jnp.float32) -> jnp.ndarray:
     """Materialize a (possibly packed) weight as a dense array.
 
     Fallback for consumers the kernel cannot serve — embedding gathers and
-    the batched MoE expert einsums — under lazy-quant mode.
+    per-channel-scale layouts — under lazy-quant mode.
     """
     if _is_qtensor(w):
         return (w.codes.astype(jnp.float32) * w.scale.astype(jnp.float32)

@@ -1,7 +1,8 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Multi-pod dry-run (deliverable e).
+"""Multi-pod dry-run CLI (deliverable e) — a thin shim over
+:meth:`repro.api.Session.run_dryrun`.
 
 For every (architecture x input shape x mesh) cell: build the sharded step,
 ``.lower().compile()`` it AOT (ShapeDtypeStructs only — no allocation),
@@ -16,166 +17,29 @@ Usage:
 
 import argparse
 import json
-import time
 import traceback
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs import ARCH_NAMES, get_config, shapes_for
-from repro.configs.base import TrainConfig
-from repro.core.fwq import delta_for_clients
-from repro.dist.sharding import batch_specs
-from repro.launch.mesh import axis_ctx_for, make_production_mesh
-from repro.launch.steps import (
-    build_decode_step,
-    build_prefill_step,
-    build_train_step,
-    globalize,
-    local_param_shapes,
-    serving_axes,
-    _batch_size,
-)
-from repro.models.model import build_model
-from repro.optim import build_optimizer
-from repro.roofline.analysis import analyze_compiled, model_flops
-
-
-def _bf16(dt):
-    return jnp.bfloat16 if jnp.issubdtype(dt, jnp.floating) else dt
-
-
-def lower_cell(arch: str, shape_name: str, multi_pod: bool,
-               variant: dict | None = None):
-    """Returns (compiled, lowered, meta) for one cell.
-
-    ``variant`` (§Perf knobs): gather_bf16, grad_bits, capacity, serve_bits,
-    no_remat.
-    """
-    import dataclasses as _dc
-
-    variant = variant or {}
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    axes = axis_ctx_for(mesh)
-    cfg = get_config(arch)
-    if variant.get("gather_bf16"):
-        cfg = _dc.replace(cfg, fsdp_gather_dtype="bfloat16")
-    if variant.get("capacity"):
-        cfg = _dc.replace(cfg, capacity_factor=float(variant["capacity"]))
-    if variant.get("no_remat"):
-        cfg = _dc.replace(cfg, remat=False)
-    model = build_model(cfg)
-    spec = {s.name: s for s in shapes_for(cfg)}[shape_name]
-    rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32,
-                                   sharding=NamedSharding(mesh, P()))
-
-    if spec.kind == "train":
-        opt = build_optimizer("sgd", 1e-3)
-        tc = TrainConfig(grad_compression_bits=int(variant.get("grad_bits", 0)))
-        ts = build_train_step(model, mesh, axes, opt, tc, donate=False)
-        pshapes = local_param_shapes(model, mesh, axes)
-        params_g = globalize(pshapes, ts.param_specs, mesh)
-        opt_shapes = jax.eval_shape(opt.init, pshapes)
-        opt_g = globalize(opt_shapes, ts.opt_specs, mesh)
-        batch_tree = model.train_batch_spec(spec.global_batch, spec.seq_len)
-        bspecs = batch_specs(batch_tree, axes)
-        batch_g = globalize(
-            jax.tree_util.tree_map(
-                lambda l: jax.ShapeDtypeStruct(
-                    (l.shape[0] // _batch_size(mesh, axes),) + l.shape[1:], l.dtype),
-                batch_tree),
-            bspecs, mesh)
-        n_clients = ts.n_clients
-        delta_g = jax.ShapeDtypeStruct(
-            (n_clients,), jnp.float32,
-            sharding=NamedSharding(mesh, P(axes.batch_axes if len(axes.batch_axes) > 1
-                                           else axes.batch_axes[0])))
-        step = ts.fn(batch_tree)
-        lowered = step.lower(params_g, opt_g, batch_g, delta_g, rng_sds)
-
-    elif spec.kind == "prefill":
-        wrap, pspecs = build_prefill_step(model, mesh, axes)
-        pshapes = local_param_shapes(model, mesh, axes)
-        params_g = globalize(pshapes, pspecs, mesh, dtype_map=_bf16)
-        batch_tree = model.train_batch_spec(spec.global_batch, spec.seq_len)
-        batch_tree = {k: v for k, v in batch_tree.items() if k != "labels"}
-        bspecs = batch_specs(batch_tree, axes)
-        batch_g = globalize(
-            jax.tree_util.tree_map(
-                lambda l: jax.ShapeDtypeStruct(
-                    (l.shape[0] // _batch_size(mesh, axes),) + l.shape[1:], l.dtype),
-                batch_tree),
-            bspecs, mesh)
-        step = wrap(batch_tree)
-        lowered = step.lower(params_g, batch_g)
-
-    else:  # decode
-        sv_axes = serving_axes(axes, spec.global_batch, mesh)
-        params_tree = None
-        if variant.get("serve_bits"):
-            # packed int8 serving weights (QTensor): gathers stream codes
-            from repro.core.quantization import default_exempt
-            from repro.models.common import pack_params_for_serving
-            bits = int(variant["serve_bits"])
-            pshapes_local = local_param_shapes(model, mesh, sv_axes)
-            params_tree = jax.eval_shape(
-                lambda: pack_params_for_serving(
-                    jax.tree_util.tree_map(
-                        lambda l: jnp.zeros(l.shape, l.dtype), pshapes_local),
-                    bits, jax.random.PRNGKey(0), exempt=default_exempt))
-        ss = build_decode_step(model, mesh, sv_axes, s_max=spec.seq_len,
-                               batch_global=spec.global_batch,
-                               params_tree=params_tree)
-        params_g = globalize(ss.param_shapes, ss.param_specs, mesh,
-                             dtype_map=_bf16)
-        caches_g = globalize(ss.caches_shape, ss.cache_specs, mesh)
-        batch_tree = model.decode_batch_spec(spec.global_batch, spec.seq_len)
-        bspecs = batch_specs(batch_tree, sv_axes)
-        bsz = _batch_size(mesh, sv_axes)
-        batch_g = globalize(
-            jax.tree_util.tree_map(
-                lambda l: jax.ShapeDtypeStruct(
-                    (l.shape[0] // max(bsz, 1),) + l.shape[1:], l.dtype),
-                batch_tree),
-            bspecs, mesh)
-        lowered = ss.fn.lower(params_g, batch_g, caches_g)
-
-    compiled = lowered.compile()
-    meta = dict(arch=arch, shape=shape_name,
-                mesh="2x16x16" if multi_pod else "16x16",
-                n_devices=512 if multi_pod else 256,
-                kind=spec.kind, seq_len=spec.seq_len,
-                global_batch=spec.global_batch)
-    return compiled, lowered, meta
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose=True,
-             variant: dict | None = None):
-    t0 = time.time()
-    cfg = get_config(arch)
-    spec = {s.name: s for s in shapes_for(cfg)}[shape_name]
-    compiled, lowered, meta = lower_cell(arch, shape_name, multi_pod, variant)
-    if variant:
-        meta["variant"] = dict(variant)
-    mf = model_flops(cfg, spec.kind, spec.seq_len, spec.global_batch)
-    rep = analyze_compiled(compiled, arch=arch, shape=shape_name,
-                           mesh_name=meta["mesh"], n_devices=meta["n_devices"],
-                           model_flops_global=mf)
-    d = rep.to_dict()
-    d.update(meta, compile_s=round(time.time() - t0, 1), status="ok")
-    if verbose:
-        print(f"[{arch} x {shape_name} x {meta['mesh']}] "
-              f"compile={d['compile_s']}s  "
-              f"compute={rep.compute_s:.3e}s memory={rep.memory_s:.3e}s "
-              f"collective={rep.collective_s:.3e}s  dominant={rep.dominant}  "
-              f"useful={rep.useful_flops_ratio:.3f}")
-        print("  memory_analysis:", rep.memory_stats)
-        print("  collectives:", {k: v for k, v in rep.collective_breakdown.items()})
-    return d
+             variant: dict | None = None, precision=None):
+    """Lower/compile/analyze one cell through the Session facade."""
+    from repro.api import PrecisionPolicy, RunSpec, Session
+
+    variant = dict(variant or {})
+    if precision is None:
+        # pre-facade contract: the bit knobs rode in the variant dict
+        precision = PrecisionPolicy(
+            weights=int(variant.get("serve_bits") or 32),
+            comm=int(variant.get("grad_bits") or 32))
+    spec = RunSpec(
+        arch=arch, workload="dryrun",
+        mesh="2x16x16" if multi_pod else "16x16", smoke=False,
+        precision=precision,
+        options={"shape": shape_name, "variant": variant})
+    return Session(spec).run_dryrun(verbose=verbose)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -187,11 +51,22 @@ def main():
     ap.add_argument("--capacity", type=float, default=0.0)
     ap.add_argument("--serve-bits", type=int, default=0)
     ap.add_argument("--no-remat", action="store_true")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+
+    from repro.api import PrecisionPolicy
+    from repro.configs import ARCH_NAMES, get_config, shapes_for
+
+    # CLI shim: the bit knobs fold into one PrecisionPolicy; the cfg knobs
+    # stay a variant dict (recorded in the output rows).  lazy stays off:
+    # the AOT roofline measures the packed-storage gathers; the interpret-
+    # mode Pallas body would skew the CPU cost model.
+    precision = PrecisionPolicy(
+        weights=args.serve_bits if args.serve_bits else 32,
+        comm=args.grad_bits or 32)
     variant = {k: v for k, v in dict(
-        gather_bf16=args.gather_bf16, grad_bits=args.grad_bits,
-        capacity=args.capacity, serve_bits=args.serve_bits,
-        no_remat=args.no_remat).items() if v}
+        gather_bf16=args.gather_bf16, capacity=args.capacity,
+        no_remat=args.no_remat, grad_bits=args.grad_bits,
+        serve_bits=args.serve_bits).items() if v}
 
     archs = list(ARCH_NAMES) if (args.all or not args.arch) else [args.arch]
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
@@ -205,7 +80,8 @@ def main():
         for shape in shapes:
             for mp in meshes:
                 try:
-                    results.append(run_cell(arch, shape, mp, variant=variant))
+                    results.append(run_cell(arch, shape, mp, variant=variant,
+                                            precision=precision))
                 except Exception as e:
                     traceback.print_exc()
                     results.append(dict(arch=arch, shape=shape,

@@ -1,7 +1,9 @@
-"""Production mesh construction.
+"""Mesh construction + axis bookkeeping (the single bootstrapping point).
 
-``make_production_mesh`` is a FUNCTION (importing this module never touches
-jax device state).  Single pod: 16x16 = 256 chips (TPU v5e);
+Every launcher used to re-derive mesh shapes and axis contexts by hand; all
+of that lives here now and is consumed through :class:`repro.api.Session`.
+``build_mesh``/``mesh_and_axes`` are FUNCTIONS (importing this module never
+touches jax device state).  Single pod: 16x16 = 256 chips (TPU v5e);
 multi-pod: 2x16x16 = 512 — the leading ``pod`` axis extends data parallelism
 (FL client cohorts double).
 """
@@ -12,12 +14,32 @@ import jax
 
 from repro.dist.collectives import AxisCtx
 
+_AXES_FOR_RANK = {1: ("data",), 2: ("data", "model"), 3: ("pod", "data", "model")}
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+
+def parse_mesh(spec: str) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """``"DATAxMODEL"`` / ``"PODxDATAxMODEL"`` -> (shape, axis names)."""
+    shape = tuple(int(x) for x in str(spec).lower().split("x"))
+    if len(shape) not in _AXES_FOR_RANK:
+        raise ValueError(f"mesh spec {spec!r} must have 1-3 'x'-separated dims")
+    return shape, _AXES_FOR_RANK[len(shape)]
+
+
+def build_mesh(spec: str):
+    """Mesh from a ``"2x16x16"``-style string (axis names inferred by rank)."""
+    shape, axes = parse_mesh(spec)
     return jax.make_mesh(shape, axes,
                          axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_and_axes(spec: str):
+    """The one-call bootstrap: (mesh, AxisCtx) from a mesh-spec string."""
+    mesh = build_mesh(spec)
+    return mesh, axis_ctx_for(mesh)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    return build_mesh("2x16x16" if multi_pod else "16x16")
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):
@@ -36,6 +58,29 @@ def axis_ctx_for(mesh) -> AxisCtx:
     return AxisCtx(batch_axes=batch, model_axis=model, fsdp_axes=batch)
 
 
-def mesh_axis_size(mesh, name: str) -> int:
+def mesh_axis_size(mesh, name: str | None) -> int:
+    if name is None:
+        return 1
     d = dict(zip(mesh.axis_names, mesh.devices.shape))
     return d.get(name, 1)
+
+
+def tp_size(mesh, axes: AxisCtx) -> int:
+    """Model-parallel (tensor-parallel) world size."""
+    return mesh_axis_size(mesh, axes.model_axis)
+
+
+def fsdp_size(mesh, axes: AxisCtx) -> int:
+    """Product of the FSDP axes' sizes."""
+    n = 1
+    for a in axes.fsdp_axes:
+        n *= mesh_axis_size(mesh, a)
+    return n
+
+
+def batch_size(mesh, axes: AxisCtx) -> int:
+    """Product of the batch (data-parallel / FL-client) axes' sizes."""
+    n = 1
+    for a in axes.batch_axes:
+        n *= mesh_axis_size(mesh, a)
+    return n

@@ -1,17 +1,13 @@
-"""Continuous-batching quantized serving driver.
+"""Continuous-batching quantized serving CLI — a thin shim over
+:class:`repro.api.Session`.
 
 The FWQ-quantized model is packed once (:class:`QTensor` int8 codes + scale)
-and — with lazy-quant dispatch — every decode step streams the packed bytes
-straight into the ``quant_matmul`` Pallas kernel: the weight stream stays
-int8 from HBM to VMEM, the serving-side realization of the paper's
-storage/energy argument.
-
-Scheduling is slot-based: ``--batch`` decode slots run in lock-step; each
-sequence carries its own cache length.  When a sequence finishes, its slot is
-freed and the next queued request is admitted mid-flight via a real prefill
-pass (parallel forward with K/V capture; encoder + cross-attention K/V fill
-for the enc-dec/VLM families) merged into just that slot — the other
-sequences keep decoding undisturbed.
+and — with a lazy :class:`~repro.api.PrecisionPolicy` — every decode step
+streams the packed bytes straight into the ``quant_matmul`` Pallas kernel:
+the weight stream stays int8 from HBM to VMEM, the serving-side realization
+of the paper's storage/energy argument.  The driver itself (slot-based
+continuous batching, per-sequence cache lengths, mid-flight prefill
+admission) lives in :meth:`repro.api.Session.serve`.
 
 CPU demo (interpret-mode kernels)::
 
@@ -22,37 +18,8 @@ CPU demo (interpret-mode kernels)::
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
-BOS_ID = 1
-
-
-@dataclasses.dataclass
-class ServeStats:
-    """What one driver run measured (bench_serving / tests consume this)."""
-
-    arch: str
-    bits: int
-    attn_impl: str
-    decode_steps: int
-    decoded_tokens: int          # tokens produced by ACTIVE slots only
-    completed: int               # sequences finished
-    admitted: int                # sequences admitted (>= batch when the
-                                 # queue forced mid-flight admissions)
-    wall_s: float                # decode-loop wall clock (post-compile)
-    tok_s: float
-    bytes_per_step_packed: int   # weight bytes streamed per decode step
-    bytes_per_step_f32: int      # same weights at f32
-    packed_vs_f32: float         # packed / f32 byte ratio
-    sample: list                 # first finished sequence's tokens
-
-
-def _weight_bytes(tree) -> int:
-    import jax
-
-    return sum(x.size * x.dtype.itemsize
-               for x in jax.tree_util.tree_leaves(tree))
+from repro.api.session import BOS_ID, ServeStats  # noqa: F401  (re-export)
 
 
 def run_serve(arch: str, *, smoke: bool = True, steps: int = 32, batch: int = 4,
@@ -60,188 +27,24 @@ def run_serve(arch: str, *, smoke: bool = True, steps: int = 32, batch: int = 4,
               attn_impl: str = "ref", mesh: str = "1x1", seed: int = 0,
               requests: int | None = None, max_new: int | None = None,
               quiet: bool = False) -> ServeStats:
-    """Drive the continuous-batching decode loop; returns :class:`ServeStats`.
+    """Compatibility wrapper: builds a RunSpec and drives ``Session.serve``.
 
     ``serve_bits >= 32`` serves raw f32 weights (the baseline the packed
-    ratio is measured against); ``< 32`` packs to int8/int16 ``QTensor``
-    storage and decodes through the lazy-quant ``quant_matmul`` path.
-    ``attn_impl``: ``ref`` (materialized/chunked jnp prefill) or ``flash``
-    (Pallas flash-attention prefill kernel).
+    ratio is measured against); ``< 32`` maps to a lazy packed
+    :class:`~repro.api.PrecisionPolicy` (int8/int16 ``QTensor`` storage,
+    ``quant_matmul`` decode path).
     """
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
+    from repro.api import PrecisionPolicy, RunSpec, Session
 
-    from repro.configs import get_config, smoke_variant
-    from repro.core.quantization import default_exempt
-    from repro.launch.mesh import axis_ctx_for, make_test_mesh
-    from repro.launch.steps import (
-        build_cached_prefill, build_decode_step, build_init_fn,
-        init_global_caches)
-    from repro.models.common import pack_params_for_serving
-    from repro.models.model import build_model
-
-    if attn_impl not in ("ref", "flash"):
-        raise ValueError(f"attn_impl must be 'ref' or 'flash', got {attn_impl!r}")
-    impl = "auto" if attn_impl == "ref" else "flash"
-
-    def say(msg):
-        if not quiet:
-            print(msg)
-
-    cfg = get_config(arch)
-    if smoke:
-        cfg = smoke_variant(cfg)
-    model = build_model(cfg)
-    d_shape = tuple(int(x) for x in mesh.split("x"))
-    test_mesh = make_test_mesh(d_shape, ("data", "model"))
-    axes = axis_ctx_for(test_mesh)
-    prompt_len = min(prompt_len, s_max)
-
-    init_fn, _ = build_init_fn(model, test_mesh, axes)
-    params = init_fn(jax.random.PRNGKey(seed))
-
-    # ---- pack to packed int storage (norm/router exemptions as in training)
-    raw_bytes = _weight_bytes(params)
-    f32_bytes = sum(x.size * 4 for x in jax.tree_util.tree_leaves(params))
-    lazy = serve_bits < 32
-    if lazy:
-        qparams = pack_params_for_serving(params, serve_bits,
-                                          jax.random.PRNGKey(1),
-                                          exempt=default_exempt)
-        q_bytes = _weight_bytes(qparams)
-        say(f"params: {raw_bytes/1e6:.1f} MB f32 -> {q_bytes/1e6:.1f} MB packed "
-            f"({raw_bytes/q_bytes:.2f}x smaller, bits={serve_bits})")
-    else:
-        qparams, q_bytes = params, raw_bytes
-        say(f"params: {raw_bytes/1e6:.1f} MB f32 (unpacked baseline)")
-
-    # ---- compiled steps -------------------------------------------------
-    ptree = jax.eval_shape(lambda: qparams)
-    ss = build_decode_step(model, test_mesh, axes, params_tree=ptree,
-                           s_max=s_max, batch_global=batch, lazy_quant=lazy)
-    pf = build_cached_prefill(model, test_mesh, axes, params_tree=ptree,
-                              s_max=s_max, s_prompt=prompt_len,
-                              batch_global=batch, attn_impl=impl,
-                              lazy_quant=lazy, bos_id=BOS_ID)
-    caches = init_global_caches(model, test_mesh, axes, s_max=s_max,
-                                batch_global=batch, dtype=jnp.float32)
-
-    # ---- synthetic request queue ---------------------------------------
-    budget = s_max - prompt_len - 1
-    n_requests = requests if requests is not None else 2 * batch
-    rng = np.random.RandomState(seed)
-    # default cap: ~half the step budget, so completions (and therefore
-    # mid-flight admissions) actually happen within a demo-sized run
-    cap = max_new if max_new is not None else max(2, steps // 2)
-    cap = max(1, min(cap, budget))
-    queue = [
-        {"id": i,
-         "prompt": rng.randint(2, cfg.vocab_size, size=(prompt_len,)),
-         # staggered lengths so completions (and admissions) interleave
-         "max_new": int(rng.randint(max(1, cap // 2), cap + 1))}
-        for i in range(n_requests)
-    ]
-    needs_tokens = "tokens" in model.prefill_batch_spec(batch, prompt_len, s_max)
-    d_front = cfg.d_frontend or cfg.d_model
-    n_img = cfg.n_image_tokens or 1601
-
-    def prefill_batch(slots_to_fill):
-        """Assemble the (B, ...) prefill inputs; only masked slots matter."""
-        b = {}
-        if needs_tokens:
-            toks = np.ones((batch, prompt_len), np.int32)
-            for s, req in slots_to_fill:
-                toks[s] = req["prompt"]
-            b["tokens"] = jnp.asarray(toks)
-        if cfg.family == "vlm":
-            key = jax.random.PRNGKey(seed + 101)
-            b["images"] = jax.random.normal(key, (batch, n_img, d_front),
-                                            jnp.float32)
-        if cfg.family == "encdec":
-            key = jax.random.PRNGKey(seed + 102)
-            b["frames"] = jax.random.normal(key, (batch, s_max, d_front),
-                                            jnp.float32)
-        return b
-
-    # ---- slot state (host side) ----------------------------------------
-    active = np.zeros((batch,), bool)
-    remaining = np.zeros((batch,), np.int64)
-    seqs = [[] for _ in range(batch)]
-    finished = []
-    cur_tok = jnp.full((batch, 1), BOS_ID, jnp.int32)
-    admitted = completed = decoded = 0
-
-    def admit():
-        nonlocal caches, cur_tok, admitted
-        free = [i for i in range(batch) if not active[i]]
-        if not free or not queue:
-            return
-        fill = [(s, queue.pop(0)) for s in free[: len(queue)]]
-        mask = np.zeros((batch,), bool)
-        for s, req in fill:
-            mask[s] = True
-        tok, caches = pf.fn(qparams, prefill_batch(fill), caches,
-                            jnp.asarray(mask))
-        tok = np.asarray(tok)
-        new_tok = np.array(cur_tok)
-        for s, req in fill:
-            active[s] = True
-            remaining[s] = req["max_new"]
-            seqs[s] = [int(tok[s, 0])]
-            new_tok[s] = tok[s]
-            admitted += 1
-        cur_tok = jnp.asarray(new_tok)
-
-    admit()
-    # first call compiles; its output is a real decode step, consumed below
-    tok, caches = ss.fn(qparams, {"token": cur_tok}, caches)
-    tok_h = np.asarray(tok)               # sync: compile finishes here
-    t0, step_i, decoded_at_t0 = time.time(), 1, 0
-    while True:
-        done_any = False
-        for s in range(batch):
-            if not active[s]:
-                continue
-            seqs[s].append(int(tok_h[s, 0]))
-            decoded += 1
-            remaining[s] -= 1
-            if remaining[s] <= 0 or len(seqs[s]) >= budget:
-                active[s] = False
-                finished.append(seqs[s])
-                completed += 1
-                done_any = True
-        if step_i == 1:
-            decoded_at_t0 = decoded       # step 1 ran pre-timer (compile)
-        if step_i >= steps or (not active.any() and not queue):
-            break
-        cur_tok = jnp.asarray(tok_h)      # each slot feeds its own last token
-        if done_any and queue:
-            admit()                       # mid-flight slot reuse: overwrites
-                                          # the admitted slots in cur_tok
-        tok, caches = ss.fn(qparams, {"token": cur_tok}, caches)
-        tok_h = np.asarray(tok)
-        step_i += 1
-    wall = time.time() - t0
-
-    stats = ServeStats(
-        arch=arch, bits=serve_bits, attn_impl=attn_impl,
-        decode_steps=step_i, decoded_tokens=decoded, completed=completed,
-        admitted=admitted, wall_s=wall,
-        tok_s=(decoded - decoded_at_t0) / max(wall, 1e-9),
-        bytes_per_step_packed=q_bytes, bytes_per_step_f32=f32_bytes,
-        packed_vs_f32=q_bytes / max(f32_bytes, 1),
-        sample=(finished[0] if finished else seqs[0])[:16],
-    )
-    say(f"decoded {stats.decoded_tokens} tokens over {stats.decode_steps} steps "
-        f"x {batch} slots in {wall:.3f}s = {stats.tok_s:.1f} tok/s "
-        f"(interpret-mode numbers off-TPU)")
-    say(f"admitted {stats.admitted} / completed {stats.completed} sequences "
-        f"(continuous batching over {n_requests} requests)")
-    say(f"weight stream: {q_bytes/1e6:.1f} MB/step packed vs "
-        f"{f32_bytes/1e6:.1f} MB/step f32 -> ratio {stats.packed_vs_f32:.3f}")
-    say(f"sample: {stats.sample}")
-    return stats
+    precision = (PrecisionPolicy(weights=serve_bits, lazy=True)
+                 if serve_bits < 32 else PrecisionPolicy.full_precision())
+    spec = RunSpec(
+        arch=arch, workload="serve", mesh=mesh, smoke=smoke, seed=seed,
+        batch=batch, seq=s_max, precision=precision,
+        options={"steps": steps, "s_max": s_max, "prompt_len": prompt_len,
+                 "attn_impl": attn_impl, "requests": requests,
+                 "max_new": max_new, "quiet": quiet})
+    return Session(spec).serve()
 
 
 def main(argv=None):

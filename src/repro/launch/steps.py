@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -23,13 +24,36 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.fwq import make_inline_quantizer
 from repro.dist.collectives import AxisCtx, quantized_psum_batch
 from repro.dist.sharding import batch_specs, cache_specs, tree_param_specs
+from repro.launch.mesh import batch_size, fsdp_size, mesh_axis_size
 from repro.models.common import ParamCtx, apply_fsdp_sharding, reduce_gradients
 from repro.models.model import Model
 from repro.optim import Optimizer
 
+# Historical aliases (pre-facade importers).
+_size = mesh_axis_size
+_fsdp_size = fsdp_size
+_batch_size = batch_size
+
 
 def _compute_dtype(cfg: ModelConfig):
     return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def _resolve_policy(policy, lazy_quant):
+    """Fold the deprecated ``lazy_quant=`` knob into a PrecisionPolicy."""
+    if lazy_quant is None:
+        return policy
+    warnings.warn(
+        "lazy_quant= is deprecated; pass policy=PrecisionPolicy(..., lazy=True)",
+        DeprecationWarning, stacklevel=3)
+    if policy is not None:
+        if bool(policy.lazy) != bool(lazy_quant):
+            raise ValueError("conflicting lazy_quant= and policy.lazy")
+        return policy
+    from repro.api.precision import PrecisionPolicy
+
+    return (PrecisionPolicy.lazy_int8() if lazy_quant
+            else PrecisionPolicy.full_precision())
 
 
 def build_init_fn(model: Model, mesh, axes: AxisCtx):
@@ -51,19 +75,6 @@ def build_init_fn(model: Model, mesh, axes: AxisCtx):
     sm = jax.shard_map(local_init, mesh=mesh, in_specs=P(),
                        out_specs=specs, check_vma=False)
     return jax.jit(sm), specs
-
-
-def _size(mesh, name):
-    if name is None:
-        return 1
-    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
-
-
-def _fsdp_size(mesh, axes: AxisCtx):
-    n = 1
-    for a in axes.fsdp_axes:
-        n *= _size(mesh, a)
-    return n
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,12 +251,15 @@ def _greedy_pick(axes: AxisCtx, tp: int, vl: int, logits):
 
 def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
                       params_tree=None, s_max: int, batch_global: int,
-                      lazy_quant: bool = False):
+                      policy=None, lazy_quant: bool | None = None):
     """One-token decode step (greedy sampling over vocab-parallel logits).
 
-    ``lazy_quant``: packed ``QTensor`` weights stay int8 through the matmuls
+    ``policy`` (:class:`repro.api.precision.PrecisionPolicy`): with
+    ``policy.lazy``, packed ``QTensor`` weights stay int8 through the matmuls
     (quant_matmul kernel dispatch) instead of being dequantized on use.
+    ``lazy_quant`` is the deprecated boolean form.
     """
+    policy = _resolve_policy(policy, lazy_quant)
     cfg = model.cfg
     tp = _size(mesh, axes.model_axis)
     fsdp = _fsdp_size(mesh, axes)
@@ -253,8 +267,8 @@ def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
     vl = padded_vocab_local(cfg, tp)
 
     def local_decode(params, batch, caches):
-        pc = ParamCtx(ctx=axes, transform=None, compute_dtype=_compute_dtype(cfg),
-                      lazy_quant=lazy_quant)
+        pc = ParamCtx.from_policy(axes, policy,
+                                  compute_dtype=_compute_dtype(cfg))
         logits, new_caches = model.decode_step(pc, params, batch, caches)
         return _greedy_pick(axes, tp, vl, logits), new_caches
 
@@ -278,13 +292,6 @@ def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
                        check_vma=False)
     return ServeStep(fn=jax.jit(sm), param_specs=param_specs, cache_specs=c_specs,
                      param_shapes=params_tree, caches_shape=caches_shape)
-
-
-def _batch_size(mesh, axes: AxisCtx):
-    n = 1
-    for a in axes.batch_axes:
-        n *= _size(mesh, a)
-    return n
 
 
 def init_global_caches(model: Model, mesh, axes: AxisCtx, *, s_max: int,
@@ -312,7 +319,8 @@ def init_global_caches(model: Model, mesh, axes: AxisCtx, *, s_max: int,
 def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
                          params_tree=None, s_max: int, s_prompt: int,
                          batch_global: int, attn_impl: str = "auto",
-                         lazy_quant: bool = False, bos_id: int = 1):
+                         policy=None, lazy_quant: bool | None = None,
+                         bos_id: int = 1):
     """Prefill-into-slots step for continuous batching.
 
     The jitted fn signature is ``(params, batch, caches, slot_mask) ->
@@ -326,6 +334,7 @@ def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
     ``attn_impl="flash"`` routes the prompt self-attention through the
     Pallas flash-attention kernel.
     """
+    policy = _resolve_policy(policy, lazy_quant)
     cfg = model.cfg
     tp = _size(mesh, axes.model_axis)
     fsdp = _fsdp_size(mesh, axes)
@@ -344,8 +353,8 @@ def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
         return jax.tree_util.tree_map(one, old, new)
 
     def local_prefill(params, batch, caches, slot_mask):
-        pc = ParamCtx(ctx=axes, transform=None, compute_dtype=_compute_dtype(cfg),
-                      lazy_quant=lazy_quant)
+        pc = ParamCtx.from_policy(axes, policy,
+                                  compute_dtype=_compute_dtype(cfg))
         fresh = jax.tree_util.tree_map(jnp.zeros_like, caches)
         logits, filled = model.prefill(pc, params, batch, fresh,
                                        attn_impl=attn_impl)

@@ -1,10 +1,11 @@
-"""End-to-end FWQ-FL training driver (pod-scale path).
+"""End-to-end FWQ-FL training CLI — a thin shim over :class:`repro.api.Session`.
 
 Maps the paper's loop onto the mesh: each data-parallel group is an FL
 client; every round the GBD co-design picks per-client bit-widths from the
-simulated 5G channel + device fleet; one jitted shard_map step trains at the
-quantized weights; energy/latency are accounted; checkpoints land every k
-rounds and resume bit-identically.
+simulated 5G channel + device fleet (``--scheme fixed`` skips the co-design
+and trains at the spec's fixed PrecisionPolicy); one jitted shard_map step
+trains at the quantized weights; energy/latency are accounted; checkpoints
+land every k rounds and resume bit-identically.
 
 On the CPU container run the smoke configs::
 
@@ -15,13 +16,7 @@ On the CPU container run the smoke configs::
 from __future__ import annotations
 
 import argparse
-import json
 import logging
-import time
-
-import numpy as np
-
-log = logging.getLogger("repro.train")
 
 
 def main(argv=None):
@@ -35,108 +30,33 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--scheme", default="fwq",
-                    choices=["fwq", "full_precision", "unified_q", "rand_q"])
+                    choices=["fwq", "full_precision", "unified_q", "rand_q",
+                             "fixed"])
+    ap.add_argument("--bits", type=int, default=32,
+                    help="fixed weight bit-width (--scheme fixed only)")
     ap.add_argument("--grad-compression-bits", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
-    import jax
-    import jax.numpy as jnp
-
-    from repro.configs import get_config, smoke_variant
-    from repro.configs.base import TrainConfig
-    from repro.core.energy import heterogeneous_fleet, memory_capacities
-    from repro.core.fwq import delta_for_clients
-    from repro.data.synthetic import SyntheticTokens
-    from repro.data.pipeline import TokenBatcher
-    from repro.fed.orchestrator import FLOrchestrator, OrchestratorConfig
-    from repro.ckpt import CheckpointManager
-    from repro.launch.mesh import axis_ctx_for, make_test_mesh
-    from repro.launch.steps import build_init_fn, build_train_step
-    from repro.models.model import build_model
-    from repro.optim import build_optimizer
+    from repro.api import PrecisionPolicy, RunSpec, Session
 
     logging.basicConfig(level=logging.INFO)
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = smoke_variant(cfg)
-    model = build_model(cfg)
-
-    d_shape = tuple(int(x) for x in args.mesh.split("x"))
-    mesh = make_test_mesh(d_shape, ("data", "model"))
-    axes = axis_ctx_for(mesh)
-    init_fn, _ = build_init_fn(model, mesh, axes)
-    params = init_fn(jax.random.PRNGKey(args.seed))
-    opt = build_optimizer("sgd", args.lr)
-    tc = TrainConfig(grad_compression_bits=args.grad_compression_bits)
-    ts = build_train_step(model, mesh, axes, opt, tc, donate=False)
-    n_clients = ts.n_clients
-    B = n_clients * args.batch
-
-    # --- data ------------------------------------------------------------
-    tokens = SyntheticTokens(n_tokens=300_000, vocab=cfg.vocab_size,
-                             seed=args.seed).generate()
-    batcher = TokenBatcher(tokens, args.seq, seed=args.seed)
-
-    # --- co-design layer ---------------------------------------------------
-    fleet = heterogeneous_fleet(n_clients, seed=args.seed, group_step_mhz=5.0)
-    caps = memory_capacities(n_clients, lo_mb=8, hi_mb=64) * 1e6
-    n_params = cfg.param_count()
-    orch = FLOrchestrator(
-        OrchestratorConfig(n_devices=n_clients, n_rounds=args.rounds,
-                           scheme=args.scheme, model_dim_d=n_params,
-                           seed=args.seed),
-        fleet, caps, grad_bytes=4.0 * n_params)
-
-    step = ts.fn(model.train_batch_spec(B, args.seq))
-    opt_state = opt.init(params)
-    ck = CheckpointManager(args.ckpt_dir, every=10) if args.ckpt_dir else None
-    start = 0
-    if ck:
-        (params_opt, start, _) = ck.restore_or({"p": params, "o": opt_state})
-        if start:
-            params, opt_state = params_opt["p"], params_opt["o"]
-            log.info("resumed at round %d", start)
-
-    history = []
-    for r in range(start, args.rounds):
-        plan = orch.plan_round(r)
-        bits = plan["q"][:n_clients]
-        raw = batcher.sample_round(r, n_clients, args.batch)
-        batch = {
-            "tokens": jnp.asarray(raw["tokens"].reshape(B, args.seq)),
-            "labels": jnp.asarray(raw["labels"].reshape(B, args.seq)),
-        }
-        if cfg.family == "vlm":
-            batch["images"] = jnp.zeros((B, cfg.n_image_tokens,
-                                         cfg.d_frontend), jnp.float32)
-        if cfg.family == "encdec":
-            batch["frames"] = jnp.zeros((B, args.seq, cfg.d_frontend), jnp.float32)
-        delta = delta_for_clients(bits)
-        t0 = time.time()
-        params, opt_state, m = step(params, opt_state, batch, delta,
-                                    jax.random.fold_in(jax.random.PRNGKey(args.seed), r))
-        rec = {"round": r, "loss": float(m["loss"]),
-               "bits": bits.tolist(),
-               "energy_j": plan["energy_round"],
-               "t_round_s": plan["t_round"],
-               "wall_s": round(time.time() - t0, 3),
-               "cohort": int(plan["cohort"].sum())}
-        history.append(rec)
-        log.info("round %d loss=%.4f bits=%s energy=%.2fJ", r, rec["loss"],
-                 sorted(set(rec["bits"])), rec["energy_j"])
-        if ck:
-            ck.maybe_save(r + 1, {"p": params, "o": opt_state})
-
-    total_e = sum(h["energy_j"] for h in history)
-    print(f"\nscheme={args.scheme} rounds={len(history)} "
-          f"final_loss={history[-1]['loss']:.4f} total_energy={total_e:.2f}J")
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(history, f, indent=1)
-    return history
+    comm = args.grad_compression_bits or 32
+    if args.scheme == "fixed":
+        workload = "train"
+        precision = PrecisionPolicy.uniform(args.bits, comm=comm)
+    else:
+        workload = "fl-orchestrate"
+        precision = PrecisionPolicy(comm=comm)
+    spec = RunSpec(
+        arch=args.arch, workload=workload, mesh=args.mesh, smoke=args.smoke,
+        seed=args.seed, batch=args.batch, seq=args.seq, rounds=args.rounds,
+        precision=precision,
+        options={"scheme": args.scheme, "lr": args.lr,
+                 "ckpt_dir": args.ckpt_dir, "out": args.out})
+    return Session(spec).run()
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ over the whole mesh.  The two cross-cutting concerns are factored here:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -125,12 +126,16 @@ class ParamCtx:
     ``gather_dtype``: cast parameters to this dtype BEFORE the FSDP
     all-gather (e.g. bf16 halves gather bytes; §Perf knob).
 
-    ``lazy_quant``: serving fast path.  When True, ``use()`` on a
-    :class:`QTensor` returns the packed handle itself (codes gathered, NOT
-    dequantized); matmul call sites dispatch on leaf type via
+    ``policy``: a :class:`repro.api.precision.PrecisionPolicy`.  Its ``lazy``
+    flag selects the serving fast path: ``use()`` on a :class:`QTensor`
+    returns the packed handle itself (codes gathered, NOT dequantized);
+    matmul call sites dispatch on leaf type via
     :func:`repro.kernels.ops.dense_dispatch`, so dequantization happens
     tile-by-tile inside the ``quant_matmul`` kernel and the weight stream
     stays int8 all the way from HBM to VMEM.
+
+    ``lazy_quant``: DEPRECATED boolean form of ``policy.lazy`` — still honored
+    (with a warning) so pre-facade callers keep working.
     """
 
     ctx: AxisCtx
@@ -138,7 +143,29 @@ class ParamCtx:
     compute_dtype: Any = jnp.bfloat16
     sp: bool = False
     gather_dtype: Any = None
-    lazy_quant: bool = False
+    lazy_quant: bool | None = None
+    policy: Any = None
+
+    def __post_init__(self):
+        if self.lazy_quant is not None:
+            warnings.warn(
+                "ParamCtx(lazy_quant=...) is deprecated; pass "
+                "policy=PrecisionPolicy(..., lazy=True) or use "
+                "ParamCtx.from_policy(...)", DeprecationWarning, stacklevel=3)
+
+    @property
+    def lazy(self) -> bool:
+        if self.lazy_quant is not None:
+            return bool(self.lazy_quant)
+        return bool(getattr(self.policy, "lazy", False))
+
+    @classmethod
+    def from_policy(cls, ctx: AxisCtx, policy, *, transform=None,
+                    compute_dtype=jnp.bfloat16, sp: bool = False,
+                    gather_dtype=None) -> "ParamCtx":
+        """The policy-driven constructor every launcher goes through."""
+        return cls(ctx=ctx, transform=transform, compute_dtype=compute_dtype,
+                   sp=sp, gather_dtype=gather_dtype, policy=policy)
 
     def is_fsdp(self, path: str, w) -> bool:
         """w is the *stored local* leaf (per-layer view inside a scan)."""
@@ -156,7 +183,7 @@ class ParamCtx:
         gather = self.is_fsdp(path, w)
         if isinstance(w, QTensor):
             codes = self.ctx.gather_fsdp(w.codes, axis=dim) if gather else w.codes
-            if self.lazy_quant and self.transform is None:
+            if self.lazy and self.transform is None:
                 return QTensor(codes, w.scale)
             full = codes.astype(jnp.float32) * w.scale.astype(jnp.float32)
         else:
@@ -283,6 +310,19 @@ def key_iter(key):
 # ---------------------------------------------------------------------------
 # Serving-path packing
 # ---------------------------------------------------------------------------
+
+
+def pack_params_for_policy(params, policy, key, *, exempt=None) -> Any:
+    """Pack a param tree per a :class:`~repro.api.precision.PrecisionPolicy`.
+
+    Identity at 32-bit weights; otherwise int8/int16 :class:`QTensor` codes at
+    ``policy.serve_bits`` (the uniform serving bit-width the co-design chose).
+    """
+    if not policy.packed:
+        return params
+    if exempt is None:
+        from repro.core.quantization import default_exempt as exempt
+    return pack_params_for_serving(params, policy.serve_bits, key, exempt=exempt)
 
 
 def pack_params_for_serving(params, bits: int, key, *, exempt) -> Any:

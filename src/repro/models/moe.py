@@ -25,7 +25,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import as_array
+from repro.kernels.ops import expert_dispatch
 from repro.models.common import ParamCtx, init_dense
 from repro.models.layers import sp_out
 
@@ -101,20 +101,18 @@ def moe_block(pc: ParamCtx, path: str, p, x, dims: MoEDims):
     buf = buf[:, :cap]                                         # (e_loc, cap, D)
 
     # --- expert FFN (batched matmul over local experts) -------------------
-    # Lazy-quant fallback: the (e, c, d) x (e, d, f) expert einsum has no
-    # quant_matmul lowering (batched expert dim), so packed stacks are
-    # dequantized here; per-expert kernel dispatch is future work.
-    w_up = as_array(pc.use(f"{path}/w_up", p["w_up"]), x.dtype)
-    w_down = as_array(pc.use(f"{path}/w_down", p["w_down"]), x.dtype)
-    up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    # Under lazy-quant the stacks stay packed: expert_dispatch routes each
+    # expert's matmul through the quant_matmul kernel (int8 codes stream
+    # straight from HBM; the expert loop is static and unrolls).
+    up = expert_dispatch(buf, pc.use(f"{path}/w_up", p["w_up"]), x.dtype)
     if dims.act in ("swiglu", "geglu"):
-        w_gate = as_array(pc.use(f"{path}/w_gate", p["w_gate"]), x.dtype)
-        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        g = expert_dispatch(buf, pc.use(f"{path}/w_gate", p["w_gate"]), x.dtype)
         h = (jax.nn.silu(g) if dims.act == "swiglu"
              else jax.nn.gelu(g, approximate=True)) * up
     else:
         h = jax.nn.gelu(up, approximate=True)
-    out = jnp.einsum("ecf,efd->ecd", h, w_down)                # (e_loc, cap, D)
+    out = expert_dispatch(h, pc.use(f"{path}/w_down", p["w_down"]), x.dtype)
+    # out: (e_loc, cap, D)
 
     # --- un-dispatch + combine --------------------------------------------
     out = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))               # trash row back

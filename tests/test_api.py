@@ -1,0 +1,202 @@
+"""Facade tests: RunSpec round-trip, PrecisionPolicy -> kernel bit-widths,
+Session-vs-legacy serve equivalence, workload launches, deprecation shims."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import PrecisionPolicy, RunSpec, Session, WORKLOADS
+from repro.configs.base import ShapeSpec
+from repro.core.gbd import GBDResult
+from repro.core.quantization import default_exempt, storage_dtype
+from repro.kernels import ops
+from repro.models.common import QTensor, pack_params_for_policy
+
+
+def _gbd_result(q):
+    q = np.asarray(q)
+    return GBDResult(q=q, bandwidth=np.ones((2, q.size)),
+                     t_rounds=np.ones((2,)), energy=1.0, lower_bound=0.9,
+                     gap=0.1, iterations=3, converged=True, trace=[])
+
+
+class TestRunSpecRoundTrip:
+    def test_to_from_dict_json(self):
+        spec = RunSpec(
+            arch="yi-6b", workload="serve", mesh="2x4x2", smoke=True, seed=3,
+            batch=2, seq=64,
+            precision=PrecisionPolicy.from_gbd(_gbd_result([8, 16, 32]),
+                                               comm=4),
+            options={"steps": 4, "attn_impl": "flash"})
+        d = spec.to_dict()
+        d2 = json.loads(json.dumps(d))         # survives JSON
+        back = RunSpec.from_dict(d2)
+        assert back == spec
+        assert back.precision.weights == (8, 16, 32)
+        assert back.precision.grad_compression_bits == 4
+        assert back.options["attn_impl"] == "flash"
+
+    def test_workload_validated(self):
+        with pytest.raises(ValueError):
+            RunSpec(arch="yi-6b", workload="nope")
+        assert set(WORKLOADS) == {"train", "serve", "dryrun", "fl-sim",
+                                  "fl-orchestrate"}
+
+
+class TestPrecisionPolicy:
+    def test_from_gbd_per_device_bits(self):
+        pol = PrecisionPolicy.from_gbd(_gbd_result([8, 8, 16, 32]))
+        np.testing.assert_array_equal(pol.bits_vector(4), [8, 8, 16, 32])
+        # delta matches the trainer's resolution mapping
+        from repro.core.quantization import delta_from_bits
+
+        np.testing.assert_allclose(
+            np.asarray(pol.delta(4)),
+            np.asarray(delta_from_bits(jnp.asarray([8, 8, 16, 32]))))
+
+    @pytest.mark.parametrize("bits", [5, 7, 12])
+    def test_gbd_bits_reach_dense_dispatch(self, bits):
+        """from_gbd -> pack_params_for_policy -> the exact QTensor bit-width
+        dense_dispatch streams through quant_matmul."""
+        pol = PrecisionPolicy.uniform(bits, lazy=True)
+        # the co-design result carries the same bits per device
+        pol_gbd = PrecisionPolicy.from_gbd(_gbd_result([bits, bits]))
+        assert pol_gbd.bits_vector(2).tolist() == [bits, bits]
+        params = {"mlp": {"w_up": jax.random.normal(
+            jax.random.PRNGKey(bits), (64, 48), jnp.float32)}}
+        packed = pack_params_for_policy(params, pol, jax.random.PRNGKey(1),
+                                        exempt=default_exempt)
+        q = packed["mlp"]["w_up"]
+        assert isinstance(q, QTensor)
+        assert q.codes.dtype == storage_dtype(bits)
+        assert int(jnp.max(jnp.abs(q.codes))) <= 2**bits - 1
+        x = jax.random.normal(jax.random.PRNGKey(2), (3, 64), jnp.float32)
+        got = ops.dense_dispatch(x, q)
+        want = x @ (q.codes.astype(jnp.float32) * q.scale)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_full_precision_policy_is_identity(self):
+        pol = PrecisionPolicy.full_precision()
+        params = {"w": jnp.ones((16, 16))}
+        assert pack_params_for_policy(params, pol, jax.random.PRNGKey(0)) \
+            is params
+        assert not pol.packed
+
+    def test_role_validation(self):
+        with pytest.raises(ValueError):
+            PrecisionPolicy(grads=16)          # paper: f32 aggregation only
+        with pytest.raises(ValueError):
+            PrecisionPolicy(weights=32, lazy=True)
+        with pytest.raises(ValueError):
+            PrecisionPolicy(weights=(8, 16), lazy=True)
+        with pytest.raises(ValueError):
+            PrecisionPolicy(weights=(8, 16)).serve_bits
+        with pytest.raises(ValueError):
+            PrecisionPolicy(weights=0)         # 1/(2^0 - 1) would div-zero
+        with pytest.raises(ValueError):
+            PrecisionPolicy(kv_cache=8)        # int KV cache: not implemented
+        assert PrecisionPolicy(kv_cache=16).kv_cache_dtype() == jnp.bfloat16
+
+
+class TestSessionServe:
+    def test_session_serve_bitwise_matches_run_serve(self):
+        """The facade serve path decodes exactly what the legacy run_serve
+        entry point (PR 2) decodes for the same spec."""
+        from repro.launch.serve import run_serve
+
+        kw = dict(steps=10, batch=2, s_max=32, prompt_len=8,
+                  requests=2, max_new=4)
+        legacy = run_serve("yi-6b", smoke=True, serve_bits=7,
+                           attn_impl="ref", quiet=True, **kw)
+        spec = RunSpec(arch="yi-6b", workload="serve", smoke=True, batch=2,
+                       seq=32, precision=PrecisionPolicy.lazy_int8(7),
+                       options=dict(steps=10, s_max=32, prompt_len=8,
+                                    requests=2, max_new=4, attn_impl="ref",
+                                    quiet=True))
+        facade = Session(spec).serve()
+        assert facade.sample == legacy.sample
+        assert facade.decoded_tokens == legacy.decoded_tokens
+        assert facade.decode_steps == legacy.decode_steps
+        assert facade.bytes_per_step_packed == legacy.bytes_per_step_packed
+
+
+class TestSessionWorkloads:
+    def test_train_fixed_policy(self):
+        """workload=train runs rounds at the spec's fixed policy (no GBD)."""
+        spec = RunSpec(arch="yi-6b", workload="train", mesh="1x1", smoke=True,
+                       batch=1, seq=16, rounds=2,
+                       precision=PrecisionPolicy.uniform(8),
+                       options={"lr": 0.05, "quiet": True})
+        history = Session(spec).run()
+        assert len(history) == 2
+        assert history[0]["bits"] == [8]
+        assert np.isfinite(history[-1]["loss"])
+
+    def test_fl_orchestrate_gbd_policy(self):
+        """workload=fl-orchestrate: per-round bits come from the co-design
+        (PrecisionPolicy.from_gbd inside the orchestrator)."""
+        spec = RunSpec(arch="yi-6b", workload="fl-orchestrate", mesh="1x1",
+                       smoke=True, batch=1, seq=16, rounds=2,
+                       options={"scheme": "fwq", "lr": 0.05, "quiet": True})
+        sess = Session(spec)
+        history = sess.run()
+        assert len(history) == 2
+        st = sess._ensure_train_state()
+        plan = st["orch"].plan_round(0)
+        assert isinstance(plan["policy"], PrecisionPolicy)
+        assert set(history[0]["bits"]) <= set(plan["policy"].bit_options)
+
+    def test_fl_sim(self):
+        spec = RunSpec(arch="mobilenet", workload="fl-sim", rounds=2, batch=8,
+                       options={"scheme": "fwq", "n_clients": 4, "lr": 0.1})
+        out = Session(spec).run()
+        assert len(out["history"]) == 2
+        assert out["total_energy_j"] > 0
+
+    def test_dryrun_lower_tiny_cell(self):
+        """workload=dryrun AOT-lowers and compiles a cell via Session.lower."""
+        spec = RunSpec(arch="yi-6b", workload="dryrun", mesh="1x1", smoke=True)
+        cell = ShapeSpec("tiny_train", seq_len=16, global_batch=2,
+                         kind="train")
+        d = Session(spec).run_dryrun(shape=cell, verbose=False)
+        assert d["status"] == "ok"
+        assert d["kind"] == "train" and d["n_devices"] == 1
+
+
+class TestDeprecatedShims:
+    def test_paramctx_lazy_quant_warns_but_works(self):
+        from repro.launch.mesh import axis_ctx_for, make_test_mesh
+        from repro.models.common import ParamCtx
+
+        axes = axis_ctx_for(make_test_mesh((1, 1), ("data", "model")))
+        with pytest.warns(DeprecationWarning):
+            pc = ParamCtx(ctx=axes, compute_dtype=jnp.float32, lazy_quant=True)
+        assert pc.lazy
+        pc2 = ParamCtx.from_policy(axes, PrecisionPolicy.lazy_int8(),
+                                   compute_dtype=jnp.float32)
+        assert pc2.lazy
+
+    def test_build_decode_step_lazy_quant_warns_but_works(self):
+        from repro.configs import get_config, smoke_variant
+        from repro.launch.mesh import axis_ctx_for, make_test_mesh
+        from repro.launch.steps import build_decode_step
+        from repro.models.model import build_model
+
+        mesh = make_test_mesh((1, 1), ("data", "model"))
+        model = build_model(smoke_variant(get_config("yi-6b")))
+        with pytest.warns(DeprecationWarning):
+            ss = build_decode_step(model, mesh, axis_ctx_for(mesh),
+                                   s_max=16, batch_global=2, lazy_quant=False)
+        assert ss.fn is not None
+
+    def test_orchestrator_bits_options_warns_but_works(self):
+        from repro.fed.orchestrator import OrchestratorConfig
+
+        with pytest.warns(DeprecationWarning):
+            cfg = OrchestratorConfig(n_devices=4, n_rounds=2,
+                                     bits_options=(8, 32))
+        assert cfg.precision.bit_options == (8, 32)

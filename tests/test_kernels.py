@@ -182,3 +182,56 @@ class TestFlashAttentionKernel:
         np.testing.assert_allclose(
             np.asarray(jnp.transpose(y_kernel, (0, 2, 1, 3))),
             np.asarray(y_model), rtol=2e-4, atol=2e-4)
+
+
+class TestExpertDispatch:
+    """Per-expert quant_matmul dispatch for MoE stacks (ref-vs-kernel)."""
+
+    def _pack_stack(self, w, bits):
+        from repro.core.quantization import storage_dtype
+        from repro.models.common import QTensor
+
+        delta = 1.0 / (2.0**bits - 1.0)
+        lim = 2**bits - 1
+        s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+        scale = (s * delta).astype(jnp.float32)          # scalar (per-layer)
+        codes = jnp.clip(jnp.round(w / scale), -lim, lim).astype(
+            storage_dtype(bits))
+        return QTensor(codes=codes, scale=scale)
+
+    @pytest.mark.parametrize("bits", [4, 7, 12])
+    @pytest.mark.parametrize("shape", [(4, 8, 32, 48), (3, 5, 40, 24)])
+    def test_matches_eager_dequant_einsum(self, bits, shape):
+        E, C, D, F = shape
+        w = jax.random.normal(key(bits), (E, D, F), jnp.float32)
+        x = jax.random.normal(key(100 + bits), (E, C, D), jnp.float32)
+        q = self._pack_stack(w, bits)
+        assert q.codes.dtype == (jnp.int8 if bits <= 7 else jnp.int16)
+        got = ops.expert_dispatch(x, q)
+        want = jnp.einsum("ecd,edf->ecf", x, ops.as_array(q, jnp.float32))
+        assert got.shape == (E, C, F)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_plain_array_keeps_einsum(self):
+        w = jax.random.normal(key(5), (2, 16, 24), jnp.float32)
+        x = jax.random.normal(key(6), (2, 3, 16), jnp.float32)
+        got = ops.expert_dispatch(x, w)
+        want = jnp.einsum("ecd,edf->ecf", x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_per_channel_scale_falls_back(self):
+        """Non-scalar scales take the eager-dequant einsum fallback."""
+        from repro.models.common import QTensor
+
+        w = jax.random.normal(key(7), (2, 16, 24), jnp.float32)
+        q = self._pack_stack(w, 7)
+        q = QTensor(codes=q.codes, scale=jnp.full((2,), float(q.scale)))
+        x = jax.random.normal(key(8), (2, 3, 16), jnp.float32)
+        got = ops.expert_dispatch(x, q)
+        want = jnp.einsum("ecd,edf->ecf", x,
+                          q.codes.astype(jnp.float32)
+                          * q.scale[:, None, None])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

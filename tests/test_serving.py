@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import PrecisionPolicy
 from repro.configs import get_config, smoke_variant
 from repro.core.quantization import default_exempt, storage_dtype
 from repro.kernels import ops
@@ -61,7 +62,8 @@ class TestLazyQuantDense:
         axes = axis_ctx_for(MESH)
         q = _pack2d(jnp.ones((8, 8)), 7, None)
         pc_eager = ParamCtx(ctx=axes, compute_dtype=jnp.float32)
-        pc_lazy = ParamCtx(ctx=axes, compute_dtype=jnp.float32, lazy_quant=True)
+        pc_lazy = ParamCtx.from_policy(axes, PrecisionPolicy.lazy_int8(),
+                                       compute_dtype=jnp.float32)
         assert isinstance(pc_lazy.use("blocks/attn/wq", q), QTensor)
         assert isinstance(pc_eager.use("blocks/attn/wq", q), jnp.ndarray)
 
@@ -81,8 +83,32 @@ class TestDecodeLazyVsEager:
         caches = model.init_caches(B, S, tp=1, dtype=jnp.float32)
         toks = {}
         for lazy in (False, True):
+            policy = PrecisionPolicy(weights=7, lazy=lazy)
             ss = build_decode_step(model, MESH, axes, params_tree=ptree,
-                                   s_max=S, batch_global=B, lazy_quant=lazy)
+                                   s_max=S, batch_global=B, policy=policy)
+            tok, _ = ss.fn(qparams, {"token": jnp.ones((B, 1), jnp.int32)},
+                           caches)
+            toks[lazy] = np.asarray(tok)
+        np.testing.assert_array_equal(toks[False], toks[True])
+
+    def test_packed_moe_decode_matches_eager_dequant(self):
+        """MoE arch: the per-expert quant_matmul dispatch (expert_dispatch)
+        produces the same greedy token as eagerly dequantizing the stacks."""
+        cfg = smoke_variant(get_config("qwen3-moe-235b-a22b"))
+        model = build_model(cfg)
+        axes = axis_ctx_for(MESH)
+        init_fn, _ = build_init_fn(model, MESH, axes)
+        params = init_fn(jax.random.PRNGKey(0))
+        qparams = pack_params_for_serving(params, 7, jax.random.PRNGKey(1),
+                                          exempt=default_exempt)
+        B, S = 2, 16
+        ptree = jax.eval_shape(lambda: qparams)
+        caches = model.init_caches(B, S, tp=1, dtype=jnp.float32)
+        toks = {}
+        for lazy in (False, True):
+            policy = PrecisionPolicy(weights=7, lazy=lazy)
+            ss = build_decode_step(model, MESH, axes, params_tree=ptree,
+                                   s_max=S, batch_global=B, policy=policy)
             tok, _ = ss.fn(qparams, {"token": jnp.ones((B, 1), jnp.int32)},
                            caches)
             toks[lazy] = np.asarray(tok)

@@ -10,7 +10,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import codesign_instance, emit
+from benchmarks.common import bench_output, codesign_instance, emit
 from repro.core.gbd import run_gbd
 
 
@@ -35,12 +35,13 @@ def bits_vs_bandwidth(b_maxes=(4e6, 8e6, 20e6, 38e6), n=12, seed=0):
 
 
 def main(out_json=""):
-    rows = bits_vs_bandwidth()
-    for r in rows:
-        g = r["mean_bits_by_group"]
-        emit(f"fig5_B{int(r['b_max_mhz'])}MHz", r["energy"] * 1e6,
-             f"g1={g['g1']:.1f};g2={g['g2']:.1f};g3={g['g3']:.1f};"
-             f"g4={g['g4']:.1f};comm_frac={r['comm_energy_frac']:.2f}")
+    with bench_output("fig5_bandwidth"):
+        rows = bits_vs_bandwidth()
+        for r in rows:
+            g = r["mean_bits_by_group"]
+            emit(f"fig5_B{int(r['b_max_mhz'])}MHz", r["energy"] * 1e6,
+                 f"g1={g['g1']:.1f};g2={g['g2']:.1f};g3={g['g3']:.1f};"
+                 f"g4={g['g4']:.1f};comm_frac={r['comm_energy_frac']:.2f}")
     if out_json:
         with open(out_json, "w") as f:
             json.dump(rows, f, indent=1)

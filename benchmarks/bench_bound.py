@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_output, emit
 from repro.core.convergence import (ProblemConstants, corollary1_bound,
                                     estimate_constants_from_trace, quant_noise)
 from repro.data import ClientBatcher, SyntheticImages, dirichlet_partition
@@ -15,38 +15,39 @@ from repro.models.cnn import mobilenet, xent_loss
 
 
 def main(rounds=25, n_clients=6):
-    model = mobilenet(width=8, n_stages=2)
-    loss = xent_loss(model)
-    imgs, labels = SyntheticImages(n=1024, hw=16).generate()
-    parts = dirichlet_partition(labels, n_clients, alpha=0.5)
-    batcher = ClientBatcher(imgs, labels, parts, batch=16)
+    with bench_output("bound"):
+        model = mobilenet(width=8, n_stages=2)
+        loss = xent_loss(model)
+        imgs, labels = SyntheticImages(n=1024, hw=16).generate()
+        parts = dirichlet_partition(labels, n_clients, alpha=0.5)
+        batcher = ClientBatcher(imgs, labels, parts, batch=16)
 
-    results = {}
-    for bits in (32, 8, 4, 2):
-        sim = FLSimulation(loss, model.init, SimConfig(n_clients=n_clients, lr=0.05))
-        for r in range(rounds):
-            x, y = batcher.sample_round(r, np.arange(n_clients))
-            sim.run_round({"x": jnp.asarray(x), "y": jnp.asarray(y)},
-                          np.full(n_clients, bits))
-        gsq = [h["grad_norm_sq"] for h in sim.history]
-        results[bits] = float(np.mean(gsq))
+        results = {}
+        for bits in (32, 8, 4, 2):
+            sim = FLSimulation(loss, model.init, SimConfig(n_clients=n_clients, lr=0.05))
+            for r in range(rounds):
+                x, y = batcher.sample_round(r, np.arange(n_clients))
+                sim.run_round({"x": jnp.asarray(x), "y": jnp.asarray(y)},
+                              np.full(n_clients, bits))
+            gsq = [h["grad_norm_sq"] for h in sim.history]
+            results[bits] = float(np.mean(gsq))
 
-    # empirical floors should be ordered by delta^2 (Cor. 1 quantization term)
-    d2 = {b: float(quant_noise([b])[0] ** 2) for b in results}
-    emit("bound_grad_norms", 0.0,
-         ";".join(f"q{b}={results[b]:.4f}" for b in results))
-    emit("bound_floor_ordering", 0.0,
-         f"q2>=q32:{results[2] >= results[32] * 0.8};"
-         f"delta_sq_q2={d2[2]:.2e};delta_sq_q8={d2[8]:.2e}")
+        # empirical floors should be ordered by delta^2 (Cor. 1 quantization term)
+        d2 = {b: float(quant_noise([b])[0] ** 2) for b in results}
+        emit("bound_grad_norms", 0.0,
+             ";".join(f"q{b}={results[b]:.4f}" for b in results))
+        emit("bound_floor_ordering", 0.0,
+             f"q2>=q32:{results[2] >= results[32] * 0.8};"
+             f"delta_sq_q2={d2[2]:.2e};delta_sq_q8={d2[8]:.2e}")
 
-    # theory curve anchored on the fp trace
-    losses = [h["loss"] for h in sim.history]
-    consts = estimate_constants_from_trace(gsq, losses, d=1 << 14,
-                                           M=16, N=n_clients)
-    bound = corollary1_bound(consts, rounds, quant_noise([8] * n_clients))
-    emit("bound_corollary1", 0.0,
-         f"empirical_q8={results[8]:.4f};bound={bound:.4f};"
-         f"holds={results[8] <= bound * 1.5}")
+        # theory curve anchored on the fp trace
+        losses = [h["loss"] for h in sim.history]
+        consts = estimate_constants_from_trace(gsq, losses, d=1 << 14,
+                                               M=16, N=n_clients)
+        bound = corollary1_bound(consts, rounds, quant_noise([8] * n_clients))
+        emit("bound_corollary1", 0.0,
+             f"empirical_q8={results[8]:.4f};bound={bound:.4f};"
+             f"holds={results[8] <= bound * 1.5}")
     return results
 
 

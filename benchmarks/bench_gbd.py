@@ -4,24 +4,25 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import codesign_instance, emit, timed
+from benchmarks.common import bench_output, codesign_instance, emit, timed
 from repro.core.gbd import exhaustive_best, run_gbd
 
 
 def main():
-    # gap trace on a mid-size instance
-    data, spec, *_ = codesign_instance(n=10, rounds=3, seed=2)
-    us, res = timed(lambda: run_gbd(data, spec, max_rounds=30), repeats=1)
-    emit("gbd_n10", us, f"iters={res.iterations};gap={res.gap:.2e};"
-         f"energy={res.energy:.3f}J;converged={res.converged}")
+    with bench_output("gbd"):
+        # gap trace on a mid-size instance
+        data, spec, *_ = codesign_instance(n=10, rounds=3, seed=2)
+        us, res = timed(lambda: run_gbd(data, spec, max_rounds=30), repeats=1)
+        emit("gbd_n10", us, f"iters={res.iterations};gap={res.gap:.2e};"
+             f"energy={res.energy:.3f}J;converged={res.converged}")
 
-    # exactness on a brute-forceable instance
-    data, spec, *_ = codesign_instance(n=4, rounds=2, seed=1)
-    res = run_gbd(data, spec, max_rounds=30)
-    q_star, v_star = exhaustive_best(data, spec)
-    emit("gbd_vs_exhaustive_n4", 0.0,
-         f"gbd={res.energy:.5f}J;exhaustive={v_star:.5f}J;"
-         f"rel_err={(res.energy - v_star)/v_star:.2e}")
+        # exactness on a brute-forceable instance
+        data, spec, *_ = codesign_instance(n=4, rounds=2, seed=1)
+        res = run_gbd(data, spec, max_rounds=30)
+        q_star, v_star = exhaustive_best(data, spec)
+        emit("gbd_vs_exhaustive_n4", 0.0,
+             f"gbd={res.energy:.5f}J;exhaustive={v_star:.5f}J;"
+             f"rel_err={(res.energy - v_star)/v_star:.2e}")
     return res
 
 

@@ -10,7 +10,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import codesign_instance, emit
+from benchmarks.common import bench_output, codesign_instance, emit
 from repro.core import baselines
 from repro.core.gbd import run_gbd
 
@@ -31,11 +31,12 @@ def energy_vs_hetero(Ls=(0, 2, 4, 6, 8, 10), n=10, seed=0):
 
 
 def main(out_json=""):
-    rows = energy_vs_hetero()
-    for r in rows:
-        emit(f"fig4_L{r['L']}", r["fwq"] * 1e6,
-             f"fwq={r['fwq']:.3f}J;fp={r['full_precision']:.3f}J;"
-             f"uq={r['unified_q']:.3f}J;q_spread={r['q_spread']}")
+    with bench_output("fig4_hetero"):
+        rows = energy_vs_hetero()
+        for r in rows:
+            emit(f"fig4_L{r['L']}", r["fwq"] * 1e6,
+                 f"fwq={r['fwq']:.3f}J;fp={r['full_precision']:.3f}J;"
+                 f"uq={r['unified_q']:.3f}J;q_spread={r['q_spread']}")
     if out_json:
         with open(out_json, "w") as f:
             json.dump(rows, f, indent=1)

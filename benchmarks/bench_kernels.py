@@ -6,44 +6,45 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
+from benchmarks.common import bench_output, emit, timed
 from repro.kernels import ops
 
 
 def main():
-    key = jax.random.PRNGKey(0)
+    with bench_output("kernels"):
+        key = jax.random.PRNGKey(0)
 
-    w = jax.random.normal(key, (1024, 1024), jnp.float32)
-    us, _ = timed(lambda: jax.block_until_ready(ops.sr_quantize_fused(w, key, 7)),
-                  repeats=3)
-    emit("kernel_sr_quant_1024x1024", us, f"GBps={w.nbytes*2/us/1e3:.2f}")
+        w = jax.random.normal(key, (1024, 1024), jnp.float32)
+        us, _ = timed(lambda: jax.block_until_ready(ops.sr_quantize_fused(w, key, 7)),
+                      repeats=3)
+        emit("kernel_sr_quant_1024x1024", us, f"GBps={w.nbytes*2/us/1e3:.2f}")
 
-    x = jax.random.normal(key, (256, 2048), jnp.bfloat16)
-    codes = jax.random.randint(key, (2048, 1024), -127, 128, jnp.int8)
-    scale = jnp.float32(0.01)
-    us, _ = timed(lambda: jax.block_until_ready(ops.quant_matmul(x, codes, scale)),
-                  repeats=3)
-    flops = 2 * 256 * 2048 * 1024
-    emit("kernel_quant_matmul_256x2048x1024", us, f"GFLOPs={flops/us/1e3:.2f}")
+        x = jax.random.normal(key, (256, 2048), jnp.bfloat16)
+        codes = jax.random.randint(key, (2048, 1024), -127, 128, jnp.int8)
+        scale = jnp.float32(0.01)
+        us, _ = timed(lambda: jax.block_until_ready(ops.quant_matmul(x, codes, scale)),
+                      repeats=3)
+        flops = 2 * 256 * 2048 * 1024
+        emit("kernel_quant_matmul_256x2048x1024", us, f"GFLOPs={flops/us/1e3:.2f}")
 
-    # decode-shaped: a handful of rows (adaptive bm keeps the grid tight)
-    xd = jax.random.normal(key, (4, 2048), jnp.float32)
-    us, _ = timed(lambda: jax.block_until_ready(ops.quant_matmul(xd, codes, scale)),
-                  repeats=3)
-    emit("kernel_quant_matmul_decode_4x2048x1024", us,
-         f"GBps_weights={codes.nbytes/us/1e3:.2f}")
+        # decode-shaped: a handful of rows (adaptive bm keeps the grid tight)
+        xd = jax.random.normal(key, (4, 2048), jnp.float32)
+        us, _ = timed(lambda: jax.block_until_ready(ops.quant_matmul(xd, codes, scale)),
+                      repeats=3)
+        emit("kernel_quant_matmul_decode_4x2048x1024", us,
+             f"GBps_weights={codes.nbytes/us/1e3:.2f}")
 
-    # ragged / non-128-aligned (padding + masking path)
-    xr = jax.random.normal(key, (300, 700), jnp.float32)
-    cr = jax.random.randint(key, (700, 200), -127, 128, jnp.int8)
-    us, _ = timed(lambda: jax.block_until_ready(ops.quant_matmul(xr, cr, scale)),
-                  repeats=3)
-    emit("kernel_quant_matmul_ragged_300x700x200", us, "non_aligned=True")
+        # ragged / non-128-aligned (padding + masking path)
+        xr = jax.random.normal(key, (300, 700), jnp.float32)
+        cr = jax.random.randint(key, (700, 200), -127, 128, jnp.int8)
+        us, _ = timed(lambda: jax.block_until_ready(ops.quant_matmul(xr, cr, scale)),
+                      repeats=3)
+        emit("kernel_quant_matmul_ragged_300x700x200", us, "non_aligned=True")
 
-    q = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32)
-    us, _ = timed(lambda: jax.block_until_ready(ops.flash_attention(q, q, q)),
-                  repeats=2)
-    emit("kernel_flash_attention_4h_1024", us, "interpret_mode=True")
+        q = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32)
+        us, _ = timed(lambda: jax.block_until_ready(ops.flash_attention(q, q, q)),
+                      repeats=2)
+        emit("kernel_flash_attention_4h_1024", us, "interpret_mode=True")
 
 
 if __name__ == "__main__":

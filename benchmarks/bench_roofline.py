@@ -1,39 +1,55 @@
-"""§Roofline table from the dry-run JSON artifacts (results/dryrun_*.json)."""
+"""§Roofline table — reads the ``roofline-all-archs`` sweep store
+(``results/sweep_roofline-all-archs.jsonl``), falling back to the legacy
+dry-run JSON artifacts.  Populate with ``repro-sweep run roofline-all-archs``.
+"""
 
 from __future__ import annotations
 
 import json
 import os
 
-from benchmarks.common import emit
+from benchmarks.common import bench_output, bench_row, emit
 
-RESULTS = ("results/dryrun_single.json", "results/dryrun_multi.json")
+LEGACY = ("results/dryrun_single.json", "results/dryrun_multi.json")
 
 
 def load_rows():
-    rows = []
-    for path in RESULTS:
-        if os.path.exists(path):
-            rows.extend(json.load(open(path)))
+    """Cell metric dicts, each tagged with the git_sha that measured it."""
+    from repro.sweep import ResultsStore, get_preset
+
+    sweep = get_preset("roofline-all-archs")
+    store = ResultsStore.for_sweep(sweep, "results")
+    rows = [dict(r["metrics"], git_sha=r.get("git_sha"))
+            for r in store.rows() if r.get("status") == "ok"]
+    if not rows:                       # legacy artifacts are a fallback only
+        for path in LEGACY:
+            if os.path.exists(path):
+                rows.extend(json.load(open(path)))
     return rows
 
 
 def main():
-    rows = load_rows()
-    if not rows:
-        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
-        return []
-    ok = [r for r in rows if r.get("status") == "ok"]
-    for r in ok:
-        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
-        frac = r["compute_s"] / step_s if step_s else 0.0
-        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
-             step_s * 1e6,
-             f"dom={r['dominant']};compute={r['compute_s']:.2e};"
-             f"mem={r['memory_s']:.2e};coll={r['collective_s']:.2e};"
-             f"flops_frac={frac:.2f};useful={r['useful_flops_ratio']:.3f}")
-    n_fail = len(rows) - len(ok)
-    emit("roofline_summary", 0.0, f"cells_ok={len(ok)};cells_fail={n_fail}")
+    with bench_output("roofline") as jrows:
+        rows = load_rows()
+        if not rows:
+            emit("roofline_missing", 0.0,
+                 "run `repro-sweep run roofline-all-archs` first")
+            return []
+        ok = [r for r in rows if r.get("status") == "ok"]
+        for r in ok:
+            step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            frac = r["compute_s"] / step_s if step_s else 0.0
+            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                 step_s * 1e6,
+                 f"dom={r['dominant']};compute={r['compute_s']:.2e};"
+                 f"mem={r['memory_s']:.2e};coll={r['collective_s']:.2e};"
+                 f"flops_frac={frac:.2f};useful={r['useful_flops_ratio']:.3f}")
+            jrows.append(bench_row(
+                f"{r['arch']}_{r['shape']}_{r['mesh']}", "roofline_step",
+                step_s, "s", git_sha=r.get("git_sha"),
+                dominant=r["dominant"]))
+        n_fail = len(rows) - len(ok)
+        emit("roofline_summary", 0.0, f"cells_ok={len(ok)};cells_fail={n_fail}")
     return ok
 
 

@@ -1,46 +1,50 @@
-"""Serving-path benchmark: drives the continuous-batching decode driver
-directly (smoke arch, N steps) for the f32 baseline and the packed int8
-fast path, and emits tok/s, weight bytes/step, and the packed-vs-f32 ratio.
+"""Serving-path benchmark — a thin wrapper over the
+``serve-precision-ablation`` sweep preset (kv-cache axis pinned to f32 for
+the CI smoke; the full kv ablation is the preset's default grid).
 
 Off-TPU the kernels run in interpret mode, so the tok/s numbers validate
 plumbing and the byte ratios are exact storage facts; real rates need a TPU.
-Regenerate the full §Perf serving ladder with ``repro.launch.serve`` over
-archs x bit-widths (see EXPERIMENTS.md §Perf).
+Regenerate the full §Perf serving ladder with ``repro-sweep run
+serve-precision-ablation`` (see EXPERIMENTS.md).
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit
+from benchmarks.common import bench_output, bench_row, emit
+from repro.sweep import ResultsStore, SweepRunner, get_preset
 
 ARCH = "yi-6b"
 STEPS = 12
-BATCH = 2
-S_MAX = 32
-PROMPT = 8
 
 
 def main():
-    from repro.api import PrecisionPolicy, RunSpec, Session
+    sweep = get_preset("serve-precision-ablation", steps=STEPS, arch=ARCH,
+                       weights=(32, 7), kv_cache=(32,))
+    # force=True: this is the CI regression smoke — always exercise the
+    # driver, never replay the store.  The recording goes to an ignored
+    # scratch dir so repeated runs don't dirty the committed grid store.
+    store = ResultsStore.for_sweep(sweep, "results/bench")
+    out = SweepRunner(sweep, store, quiet=True).run(force=True)
+    assert not out["failed"], out
 
     rows = {}
-    for bits, tag in ((32, "f32"), (7, "int8")):
-        precision = (PrecisionPolicy.lazy_int8(bits) if bits < 32
-                     else PrecisionPolicy.full_precision())
-        spec = RunSpec(arch=ARCH, workload="serve", smoke=True, batch=BATCH,
-                       seq=S_MAX, precision=precision,
-                       options={"steps": STEPS, "prompt_len": PROMPT,
-                                "attn_impl": "ref", "quiet": True})
-        stats = Session(spec).serve()
-        rows[tag] = stats
-        us_per_step = stats.wall_s / max(stats.decode_steps, 1) * 1e6
-        emit(f"serving_{ARCH}_smoke_{tag}", us_per_step,
-             f"tok_s={stats.tok_s:.1f};bytes_step={stats.bytes_per_step_packed};"
-             f"completed={stats.completed};admitted={stats.admitted}")
-    ratio = (rows["int8"].bytes_per_step_packed
-             / max(rows["f32"].bytes_per_step_f32, 1))
-    emit(f"serving_{ARCH}_smoke_packed_vs_f32", ratio * 100.0,
-         f"packed_bytes={rows['int8'].bytes_per_step_packed};"
-         f"f32_bytes={rows['f32'].bytes_per_step_f32}")
+    with bench_output("serving") as jrows:
+        for cell in sweep.cells():
+            m = store.get(cell.key)["metrics"]
+            tag = "f32" if m["bits"] >= 32 else "int8"
+            rows[tag] = m
+            us_per_step = m["wall_s"] / max(m["decode_steps"], 1) * 1e6
+            emit(f"serving_{ARCH}_smoke_{tag}", us_per_step,
+                 f"tok_s={m['tok_s']:.1f};"
+                 f"bytes_step={m['bytes_per_step_packed']};"
+                 f"completed={m['completed']};admitted={m['admitted']}")
+        ratio = (rows["int8"]["bytes_per_step_packed"]
+                 / max(rows["f32"]["bytes_per_step_f32"], 1))
+        emit(f"serving_{ARCH}_smoke_packed_vs_f32", ratio * 100.0,
+             f"packed_bytes={rows['int8']['bytes_per_step_packed']};"
+             f"f32_bytes={rows['f32']['bytes_per_step_f32']}")
+        jrows.append(bench_row(f"serving_{ARCH}_smoke", "packed_vs_f32",
+                               ratio, "ratio"))
     assert ratio < 1 / 3, (
         f"int8 serving path must stream < 1/3 the f32 weight bytes, got {ratio:.3f}")
     return rows

@@ -10,7 +10,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import codesign_instance, emit
+from benchmarks.common import bench_output, codesign_instance, emit
 from repro.core import baselines
 from repro.core.convergence import ProblemConstants, corollary2_rounds
 from repro.core.gbd import run_gbd
@@ -37,15 +37,16 @@ def energy_vs_users(ns=(2, 5, 10, 15, 20, 25, 30, 35), eps=0.35, seed=0):
 
 
 def main(out_json=""):
-    rows = energy_vs_users()
-    for r in rows:
-        emit(f"fig3_n{r['n']}", r["fwq"] * 1e6,
-             f"rounds={r['rounds']};fp={r['full_precision']:.3f}J;"
-             f"uq={r['unified_q']:.3f}J;rq={r['rand_q']:.3f}J;fwq={r['fwq']:.3f}J")
-    # headline: energy decreases then saturates
-    es = [r["fwq"] for r in rows]
-    emit("fig3_trend", 0.0, f"first={es[0]:.3f}J;last={es[-1]:.3f}J;"
-         f"monotone_drop={es[0] > es[-1]}")
+    with bench_output("fig3_users"):
+        rows = energy_vs_users()
+        for r in rows:
+            emit(f"fig3_n{r['n']}", r["fwq"] * 1e6,
+                 f"rounds={r['rounds']};fp={r['full_precision']:.3f}J;"
+                 f"uq={r['unified_q']:.3f}J;rq={r['rand_q']:.3f}J;fwq={r['fwq']:.3f}J")
+        # headline: energy decreases then saturates
+        es = [r["fwq"] for r in rows]
+        emit("fig3_trend", 0.0, f"first={es[0]:.3f}J;last={es[-1]:.3f}J;"
+             f"monotone_drop={es[0] > es[-1]}")
     if out_json:
         with open(out_json, "w") as f:
             json.dump(rows, f, indent=1)

@@ -1,7 +1,11 @@
-"""Shared benchmark scaffolding: co-design instances + CSV emission."""
+"""Shared benchmark scaffolding: co-design instances, CSV emission, and the
+one BENCH_<name>.json writer every benchmark reports through."""
 
 from __future__ import annotations
 
+import contextlib
+import json
+import os
 import time
 
 import numpy as np
@@ -64,9 +68,71 @@ def codesign_instance(n=10, rounds=4, seed=0, b_max=20e6, grad_mb=1.25,
     return data, spec, fleet, ch, comm
 
 
+def csv_header():
+    print("name,us_per_call,derived")
+
+
+_ACTIVE_ROWS: list | None = None
+
+
 def emit(name: str, value_us: float, derived: str = ""):
-    """The run.py CSV contract: ``name,us_per_call,derived``."""
+    """The run.py CSV contract: ``name,us_per_call,derived``.
+
+    Inside a :func:`bench_output` block every emitted line is also recorded
+    as a shared-schema row for the section's ``BENCH_<name>.json``.
+    """
     print(f"{name},{value_us:.2f},{derived}")
+    if _ACTIVE_ROWS is not None:
+        _ACTIVE_ROWS.append(bench_row(name, "us_per_call", value_us, "us",
+                                      derived=derived))
+
+
+def bench_row(cell: str, metric: str, value: float, units: str,
+              git_sha: str | None = None, **extra) -> dict:
+    """One row of the shared benchmark schema.
+
+    ``git_sha`` defaults to the current HEAD; replay paths (benches that
+    resume from a sweep store) must pass the *stored* record's sha so the
+    row says which commit produced the measurement, not which one reread it.
+    """
+    return {"cell": cell, "metric": metric, "value": float(value),
+            "units": units, "git_sha": git_sha or _git_sha(), **extra}
+
+
+_SHA_CACHE: list[str] = []
+
+
+def _git_sha() -> str:
+    if not _SHA_CACHE:
+        from repro.sweep.runner import git_sha
+
+        _SHA_CACHE.append(git_sha())
+    return _SHA_CACHE[0]
+
+
+def write_bench(name: str, rows: list[dict], out_dir: str = "results") -> str:
+    """Write ``BENCH_<name>.json`` (the machine-readable benchmark output)."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+@contextlib.contextmanager
+def bench_output(name: str, out_dir: str = "results"):
+    """Collect every :func:`emit` inside the block into BENCH_<name>.json.
+
+    Yields the row list so a section can append non-CSV rows
+    (:func:`bench_row`) alongside the emitted ones.
+    """
+    global _ACTIVE_ROWS
+    prev, _ACTIVE_ROWS = _ACTIVE_ROWS, []
+    try:
+        yield _ACTIVE_ROWS
+        write_bench(name, _ACTIVE_ROWS, out_dir)
+    finally:
+        _ACTIVE_ROWS = prev
 
 
 def timed(fn, *args, repeats=3, **kw):

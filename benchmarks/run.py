@@ -1,6 +1,10 @@
 """Benchmark runner: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV lines (see benchmarks/common.emit);
+every section also writes a shared-schema ``results/BENCH_<name>.json``
+(benchmarks/common.bench_output).  Sections with an experiment grid
+(fig2_convergence, serving, roofline) are thin wrappers over
+``repro.sweep`` presets and resume from the sweep's results store.
 
     PYTHONPATH=src python -m benchmarks.run           # everything
     PYTHONPATH=src python -m benchmarks.run --only fig2,kernels
@@ -13,16 +17,18 @@ import sys
 import time
 import traceback
 
+from benchmarks.common import csv_header
+
 SECTIONS = {
-    "fig2_convergence": ("benchmarks.bench_convergence", {}),
-    "fig3_users": ("benchmarks.bench_users", {}),
-    "fig4_hetero": ("benchmarks.bench_hetero", {}),
-    "fig5_bandwidth": ("benchmarks.bench_bandwidth", {}),
-    "gbd": ("benchmarks.bench_gbd", {}),
-    "bound": ("benchmarks.bench_bound", {}),
-    "kernels": ("benchmarks.bench_kernels", {}),
-    "roofline": ("benchmarks.bench_roofline", {}),
-    "serving": ("benchmarks.bench_serving", {}),
+    "fig2_convergence": "benchmarks.bench_convergence",
+    "fig3_users": "benchmarks.bench_users",
+    "fig4_hetero": "benchmarks.bench_hetero",
+    "fig5_bandwidth": "benchmarks.bench_bandwidth",
+    "gbd": "benchmarks.bench_gbd",
+    "bound": "benchmarks.bench_bound",
+    "kernels": "benchmarks.bench_kernels",
+    "roofline": "benchmarks.bench_roofline",
+    "serving": "benchmarks.bench_serving",
 }
 
 
@@ -32,16 +38,16 @@ def main() -> None:
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
-    print("name,us_per_call,derived")
+    csv_header()
     failures = []
-    for name, (mod_name, kw) in SECTIONS.items():
+    for name, mod_name in SECTIONS.items():
         if only and not any(o in name for o in only):
             continue
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         try:
             mod = __import__(mod_name, fromlist=["main"])
-            mod.main(**kw)
+            mod.main()
         except Exception as e:  # pragma: no cover
             traceback.print_exc()
             failures.append((name, str(e)))

@@ -1,15 +1,22 @@
 """Paper reproduction driver (Fig. 2): FWQ vs Full-Precision / Unified-Q /
-Rand-Q on the CIFAR-class CNN, with accuracy + energy reporting.  The shared
-recipe (`benchmarks.bench_convergence.run_scheme`) is one fl-sim RunSpec per
-scheme through the `repro.api` facade.
+Rand-Q on the CIFAR-class CNN, with accuracy + energy reporting.  The grid
+is the ``fl-codesign-grid`` sweep preset run through
+`benchmarks.bench_convergence.run_grid` (one fl-sim RunSpec per scheme);
+completed schemes resume from the results store, so re-running is free.
 
 Run:  PYTHONPATH=src python examples/fl_cifar_fwq.py [--rounds 60]
 """
 
 import argparse
 import json
+import os
+import sys
 
-from benchmarks.bench_convergence import run_scheme
+# run_grid lives in the benchmarks package at the repo root, which isn't on
+# sys.path when this file is executed as a script
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.bench_convergence import run_grid  # noqa: E402
 
 
 def main():
@@ -19,12 +26,12 @@ def main():
     ap.add_argument("--out", default="results/fig2_repro.json")
     args = ap.parse_args()
 
-    results = []
-    for scheme in ("fwq", "full_precision", "unified_q", "rand_q"):
-        r = run_scheme(scheme, rounds=args.rounds, model_kind=args.model)
-        results.append(r)
-        print(f"{scheme:>16}: final_loss={r['losses'][-1]:.4f} "
-              f"acc={r['final_acc']:.3f} energy={r['total_energy_j']:.2f}J")
+    results = run_grid(rounds=args.rounds, arch=args.model)
+    for r in results:
+        acc = r["final_acc"]
+        print(f"{r['scheme']:>16}: final_loss={r['losses'][-1]:.4f} "
+              f"acc={'-' if acc is None else f'{acc:.3f}'} "
+              f"energy={r['total_energy_j']:.2f}J")
 
     fwq = results[0]["total_energy_j"]
     print("\nenergy vs FWQ (paper Fig. 2b/d trend — FWQ should be smallest):")

@@ -6,17 +6,25 @@ Usage::
     python -m repro serve  --arch yi-6b --smoke --steps 16
     python -m repro dryrun --arch mamba2-780m --shape train_4k
     python -m repro fl     --model mobilenet --rounds 10
+    python -m repro sweep  run roofline-all-archs
 
-Each subcommand is a thin CLI over :class:`repro.api.Session`; the
-installed console scripts (``repro-train``, ``repro-serve``,
-``repro-dryrun``, ``repro-fl``) map to the same entry points.
+Each subcommand is a thin CLI over :class:`repro.api.Session` (``sweep``
+drives grids of them through :mod:`repro.sweep`); the installed console
+scripts (``repro-train``, ``repro-serve``, ``repro-dryrun``, ``repro-fl``,
+``repro-sweep``) map to the same entry points.
 """
 
 from __future__ import annotations
 
 import sys
 
-_COMMANDS = ("train", "serve", "dryrun", "fl")
+_COMMANDS = {
+    "train": "repro.launch.train",
+    "serve": "repro.launch.serve",
+    "dryrun": "repro.launch.dryrun",
+    "fl": "repro.launch.fl",
+    "sweep": "repro.sweep.cli",
+}
 
 
 def main(argv=None):
@@ -33,9 +41,10 @@ def main(argv=None):
     # initializes its backend, and the other CLIs defer jax themselves.
     import importlib
 
-    mod = importlib.import_module(f"repro.launch.{cmd}")
-    mod.main(rest)
-    return 0
+    mod = importlib.import_module(_COMMANDS[cmd])
+    rc = mod.main(rest)
+    # launcher mains return run artifacts (history dicts); only int is a code
+    return rc if isinstance(rc, int) else 0
 
 
 if __name__ == "__main__":

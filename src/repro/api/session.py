@@ -150,6 +150,25 @@ class Session:
             seed=self.spec.seed,
             grad_compression_bits=self.policy.grad_compression_bits)
 
+    def comm_report(self) -> dict:
+        """Bytes-on-wire for one round's gradient reduction on this mesh.
+
+        The accounting the sweep reporter publishes: replicated leaves move
+        ``policy.comm``-bit codes through the SR-quantized all-reduce
+        (:func:`repro.dist.collectives.quantized_psum_batch`), FSDP leaves
+        reduce-scatter in f32.  Uses the same local parameter template and
+        FSDP plan the compiled train step partitions with.
+        """
+        from repro.dist.wire import grad_wire_report
+        from repro.launch.mesh import batch_size, fsdp_size
+        from repro.launch.steps import local_param_shapes
+
+        return grad_wire_report(
+            local_param_shapes(self.model, self.mesh, self.axes),
+            fsdp=fsdp_size(self.mesh, self.axes),
+            n_clients=max(batch_size(self.mesh, self.axes), 1),
+            comm_bits=self.policy.comm)
+
     # -- primitive builders ---------------------------------------------
     def init_params(self, key=None):
         import jax

@@ -6,7 +6,12 @@ through all model code) and the SR-quantized gradient all-reduce;
 ``PartitionSpec`` layouts for ``shard_map``.
 """
 
-from repro.dist.collectives import AxisCtx, quantized_psum_batch  # noqa: F401
+from repro.dist.collectives import (  # noqa: F401
+    AxisCtx,
+    quantized_psum_batch,
+    wire_dtype,
+)
+from repro.dist.wire import grad_wire_report  # noqa: F401
 from repro.dist.sharding import (  # noqa: F401
     batch_specs,
     cache_specs,

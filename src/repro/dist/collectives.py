@@ -148,6 +148,30 @@ class AxisCtx:
                                   axis=axis, tiled=True)
 
 
+def wire_dtype(bits: int, n_clients: int):
+    """Narrowest signed integer dtype whose sum of codes is exact.
+
+    Per-client codes lie in ``[-(2^bits - 1), 2^bits - 1]``; an all-reduce
+    over ``n_clients`` needs the accumulator to hold ``n * (2^bits - 1)``.
+    This is the dtype that actually crosses the wire, so lower ``comm`` bits
+    shrink the measured all-reduce bytes (s8/s16 vs f32 in the HLO) instead
+    of always paying the int32 accumulator.
+    """
+    need = n_clients * (2 ** int(bits) - 1)
+    if need <= jnp.iinfo(jnp.int8).max:
+        return jnp.int8
+    if need <= jnp.iinfo(jnp.int16).max:
+        return jnp.int16
+    if need <= jnp.iinfo(jnp.int32).max:
+        return jnp.int32
+    # int64 is no escape hatch: without jax_enable_x64 it silently becomes
+    # int32 again, so refuse rather than wrap around
+    raise ValueError(
+        f"comm bits={bits} with {n_clients} clients needs an accumulator "
+        f"holding {need} > int32 max; lower the bit-width (<= 16 is always "
+        "safe below 32768 clients) or use 32 (uncompressed)")
+
+
 def quantized_psum_batch(axes: AxisCtx, grad, rng, bits):
     """SR-quantized all-reduce **mean** of ``grad`` over the batch axes.
 
@@ -181,8 +205,9 @@ def quantized_psum_batch(axes: AxisCtx, grad, rng, bits):
     ckey = jax.random.fold_in(rng, axes.dp_index())
     codes = _sr_round(gf / step, ckey)
     codes = jnp.clip(codes, -lim, lim)    # numeric guard; |t| <= lim already
-    # Sum in int32 so the accumulation is exact (f32 would round past 2^24:
-    # already reachable at bits=16 with ~257 clients).  Exact for
-    # n * (2^bits - 1) < 2^31 — every paper bit-width on any mesh here.
-    total = jax.lax.psum(codes.astype(jnp.int32), ax)
+    # Integer accumulation is exact as long as the dtype holds
+    # n * (2^bits - 1) — wire_dtype picks the narrowest such dtype (s8/s16/
+    # s32), so the all-reduce moves bits-scaled bytes instead of a fixed
+    # int32 (f32 would round past 2^24: reachable at bits=16, ~257 clients).
+    total = jax.lax.psum(codes.astype(wire_dtype(int(bits), n)), ax)
     return ((total.astype(jnp.float32) * step) / n).astype(grad.dtype)

@@ -1,0 +1,72 @@
+"""Gradient wire-byte accounting for the SR-quantized all-reduce.
+
+:func:`quantized_psum_batch <repro.dist.collectives.quantized_psum_batch>`
+compresses only the *replicated* gradient leaves — FSDP leaves are already
+reduce-scattered (in f32) by the all-gather transpose, and re-compressing
+them would double-reduce (see the wire-model note in
+``repro/launch/steps.py``).  :func:`grad_wire_report` turns that split into
+the bytes-on-wire numbers the sweep reporter publishes: how many gradient
+bytes one training round moves at ``comm`` bits versus uncompressed f32.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.quantization import FULL_PRECISION_BITS
+from repro.dist.collectives import wire_dtype  # noqa: F401
+
+
+def grad_wire_report(params_tree, *, fsdp: int, n_clients: int,
+                     comm_bits: int) -> dict:
+    """Per-round gradient wire bytes for one device, by reduction path.
+
+    ``params_tree`` is the (local, post-FSDP) parameter tree or its
+    ShapeDtypeStructs — the same template ``reduce_gradients`` partitions.
+    Replicated leaves cross the wire once per all-reduce at the code dtype
+    (plus one f32 scale scalar per leaf for the shared-grid ``pmax``);
+    FSDP leaves reduce-scatter in f32 regardless of ``comm``.
+    """
+    from repro.models.common import QTensor, fsdp_plan
+
+    _, leaves, _, plan = fsdp_plan(params_tree, fsdp,
+                                   check_divisibility=False)
+    repl_elems = fsdp_elems = n_repl_leaves = 0
+    for leaf, dim in zip(leaves, plan):
+        arr = leaf.codes if isinstance(leaf, QTensor) else leaf
+        size = int(np.prod(arr.shape)) if arr.shape else 1
+        if dim is None:
+            repl_elems += size
+            n_repl_leaves += 1
+        else:
+            fsdp_elems += size
+
+    if n_clients <= 1:
+        # single client: every reduction is a no-op — nothing crosses a wire
+        return {
+            "n_clients": int(n_clients), "comm_bits": int(comm_bits),
+            "wire_dtype": "none", "replicated_elems": int(repl_elems),
+            "replicated_leaves": int(n_repl_leaves),
+            "fsdp_elems": int(fsdp_elems), "replicated_bytes_f32": 0,
+            "replicated_bytes_wire": 0, "fsdp_reduce_scatter_bytes": 0,
+            "wire_ratio": 1.0,
+        }
+    # same gate as quantized_psum_batch's bypass: >= full precision is f32
+    compressed = int(comm_bits) < FULL_PRECISION_BITS
+    dt = wire_dtype(comm_bits, n_clients) if compressed else np.float32
+    itemsize = np.dtype(dt).itemsize
+    f32_bytes = repl_elems * 4
+    wire_bytes = (repl_elems * itemsize + n_repl_leaves * 4 if compressed
+                  else f32_bytes)
+    return {
+        "n_clients": int(n_clients),
+        "comm_bits": int(comm_bits),
+        "wire_dtype": np.dtype(dt).name if compressed else "float32",
+        "replicated_elems": int(repl_elems),
+        "replicated_leaves": int(n_repl_leaves),
+        "fsdp_elems": int(fsdp_elems),
+        "replicated_bytes_f32": int(f32_bytes),
+        "replicated_bytes_wire": int(wire_bytes),
+        "fsdp_reduce_scatter_bytes": int(fsdp_elems * 4),
+        "wire_ratio": wire_bytes / max(f32_bytes, 1),
+    }

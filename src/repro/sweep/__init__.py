@@ -1,0 +1,27 @@
+"""repro.sweep: resumable experiment grids over the ``repro.api`` facade.
+
+``Sweep`` declares a grid of RunSpecs (axes cross-product + presets),
+``SweepRunner`` executes it into a content-hash-keyed JSONL ``ResultsStore``
+(interruption-safe: completed cells are skipped on re-run), and ``report``
+renders the store into marker-delimited EXPERIMENTS.md tables.
+"""
+
+from repro.sweep.grid import (  # noqa: F401
+    Axis,
+    Cell,
+    PRESETS,
+    Sweep,
+    cell_key,
+    get_preset,
+)
+from repro.sweep.runner import (  # noqa: F401
+    ResultsStore,
+    SweepRunner,
+    execute_cell,
+    git_sha,
+)
+from repro.sweep.report import (  # noqa: F401
+    render_tables,
+    update_markers,
+    write_experiments,
+)

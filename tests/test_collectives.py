@@ -12,10 +12,63 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.dist.collectives import AxisCtx, quantized_psum_batch
+from repro.dist.collectives import AxisCtx, quantized_psum_batch, wire_dtype
+from repro.dist.wire import grad_wire_report
 
 LOCAL = AxisCtx(batch_axes=(), model_axis=None, fsdp_axes=())
+
+
+class TestWireDtype:
+    def test_narrowest_exact_accumulator(self):
+        # n * (2^bits - 1) must fit: 4 clients at 4 bits -> 60 -> int8
+        assert wire_dtype(4, 4) == jnp.int8
+        # 16 clients at 8 bits -> 4080 -> int16 (the 16x16 pod case)
+        assert wire_dtype(8, 16) == jnp.int16
+        # 16-bit codes always overflow int16 sums -> int32
+        assert wire_dtype(16, 2) == jnp.int32
+        assert wire_dtype(8, 200) == jnp.int32   # 200 * 255 > 32767
+        # beyond int32 there is no exact accumulator (int64 would silently
+        # downcast without x64) -> refuse instead of wrapping
+        with pytest.raises(ValueError):
+            wire_dtype(31, 2)
+
+    def test_noop_outside_mesh_preserves_dtype(self):
+        # outside a mesh the collective is a no-op; the on-wire dtype
+        # contract is pinned by the multi-device subprocess test below
+        axes = AxisCtx(batch_axes=("data",), model_axis=None,
+                       fsdp_axes=("data",))
+        g = jnp.ones((8, 8), jnp.float32)
+        out = quantized_psum_batch(axes, g, jax.random.PRNGKey(0), 8)
+        assert out.dtype == g.dtype
+
+    def test_grad_wire_report_replicated_vs_fsdp(self):
+        shapes = {
+            "norm": {"scale": jax.ShapeDtypeStruct((64,), jnp.float32)},
+            "mlp": {"w_up": jax.ShapeDtypeStruct((64, 256), jnp.float32)},
+        }
+        rep = grad_wire_report(shapes, fsdp=1, n_clients=16, comm_bits=8)
+        n_elems = 64 + 64 * 256
+        assert rep["replicated_elems"] == n_elems
+        assert rep["fsdp_elems"] == 0
+        assert rep["wire_dtype"] == "int16"          # 16 * 255 > int8
+        assert rep["replicated_bytes_f32"] == n_elems * 4
+        # int16 codes + one f32 scale scalar per leaf
+        assert rep["replicated_bytes_wire"] == n_elems * 2 + 2 * 4
+        assert rep["wire_ratio"] < 0.51
+
+        # uncompressed: wire == f32, ratio 1
+        fp = grad_wire_report(shapes, fsdp=1, n_clients=16, comm_bits=32)
+        assert fp["replicated_bytes_wire"] == fp["replicated_bytes_f32"]
+        assert fp["wire_ratio"] == 1.0
+        assert fp["wire_dtype"] == "float32"
+
+        # single client: every reduction is a no-op -> zero wire traffic
+        solo = grad_wire_report(shapes, fsdp=1, n_clients=1, comm_bits=8)
+        assert solo["replicated_bytes_wire"] == 0
+        assert solo["replicated_bytes_f32"] == 0
+        assert solo["wire_dtype"] == "none"
 
 
 class TestAxisCtxLocal:
@@ -86,8 +139,20 @@ tol = 5.0 * step / (2.0 * (N * R) ** 0.5) + 1e-6
 # every draw lies on the shared grid scaled by 1/N
 per_draw_err = float(jnp.max(jnp.abs(q8 - exact_mean[None])))
 
+# --- comm bits reach the wire: the all-reduce operand dtype narrows -------
+def lower_text(bits):
+    def local(gi, s):
+        return quantized_psum_batch(axes, gi[0], jax.random.PRNGKey(s[0]), bits)
+    sm = jax.shard_map(local, mesh=mesh, in_specs=(P("data"), P()),
+                       out_specs=P(), check_vma=False)
+    return jax.jit(sm).lower(g, jnp.zeros((1,), jnp.uint32)).as_text()
+
+t8, t4 = lower_text(8), lower_text(4)
+wire = {"i16_at_8bits": "xi16>" in t8,        # 4 * 255 -> int16 accumulator
+        "i8_at_4bits": "xi8>" in t4}          # 4 * 15  -> int8 accumulator
+
 print(json.dumps({"err_fp": err_fp, "bias": bias, "tol": tol,
-                  "step": step, "per_draw_err": per_draw_err}))
+                  "step": step, "per_draw_err": per_draw_err, **wire}))
 """
 
 
@@ -105,3 +170,5 @@ class TestQuantizedPsumMultiDevice:
         assert v["bias"] <= v["tol"], v
         # and each single draw is within one grid step of the true mean
         assert v["per_draw_err"] <= v["step"] + 1e-6, v
+        # the codes cross the wire at the narrow accumulator dtype
+        assert v["i16_at_8bits"] and v["i8_at_4bits"], v

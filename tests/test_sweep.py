@@ -1,0 +1,234 @@
+"""repro.sweep tests: grid construction, content-hash keys, resumability
+(kill mid-grid, resume, completed cells skipped), and EXPERIMENTS.md table
+determinism (interrupted-then-resumed == uninterrupted, byte for byte).
+"""
+
+import json
+
+import pytest
+
+from repro.api import PrecisionPolicy, RunSpec
+from repro.sweep import (
+    Axis,
+    PRESETS,
+    ResultsStore,
+    Sweep,
+    SweepRunner,
+    cell_key,
+    get_preset,
+    render_tables,
+    update_markers,
+    write_experiments,
+)
+from repro.sweep.grid import set_field
+
+
+def tiny_fl_sweep(name="tiny", rounds=1):
+    """3-cell fl-sim grid, seconds on CPU (the resumability fixture)."""
+    return Sweep(
+        name=name,
+        base={"arch": "mobilenet", "workload": "fl-sim", "rounds": rounds,
+              "batch": 8,
+              "options": {"n_clients": 4, "lr": 0.1, "eval_every": 0}},
+        axes=(Axis("options.scheme",
+                   ("fwq", "full_precision", "unified_q")),))
+
+
+class TestCellKey:
+    def test_key_is_order_independent_and_content_addressed(self):
+        a = {"arch": "yi-6b", "options": {"x": 1, "y": 2}, "seed": 0}
+        b = {"seed": 0, "options": {"y": 2, "x": 1}, "arch": "yi-6b"}
+        assert cell_key(a) == cell_key(b)
+        assert cell_key(a) != cell_key({**a, "seed": 1})
+
+    def test_key_hashes_resolved_spec_not_spelling(self):
+        """Defaults made explicit and omitted must hash identically."""
+        sparse = Sweep(name="s", base={"arch": "mobilenet",
+                                       "workload": "fl-sim"})
+        dense = Sweep(name="s", base=RunSpec(
+            arch="mobilenet", workload="fl-sim").to_dict())
+        assert sparse.cells()[0].key == dense.cells()[0].key
+
+    def test_precision_changes_key(self):
+        base = {"arch": "yi-6b", "workload": "serve"}
+        k32 = Sweep(name="s", base=base).cells()[0].key
+        k7 = Sweep(name="s", base={
+            **base, "precision": {"weights": 7, "lazy": True}}).cells()[0].key
+        assert k32 != k7
+
+
+class TestGrid:
+    def test_cross_product_and_dotted_fields(self):
+        sw = Sweep(name="g",
+                   base={"arch": "yi-6b", "workload": "serve",
+                         "options": {"steps": 4}},
+                   axes=(Axis("precision.kv_cache", (32, 16)),
+                         Axis("options.attn_impl", ("ref", "flash"))))
+        cells = sw.cells()
+        assert len(cells) == 4
+        combos = {(c.spec.precision.kv_cache, c.spec.options["attn_impl"])
+                  for c in cells}
+        assert combos == {(32, "ref"), (32, "flash"), (16, "ref"),
+                          (16, "flash")}
+        assert len({c.key for c in cells}) == 4
+
+    def test_dict_axis_values_merge(self):
+        d = {"precision": {"kv_cache": 16}}
+        set_field(d, "precision", {"weights": 7, "lazy": True})
+        assert d["precision"] == {"kv_cache": 16, "weights": 7, "lazy": True}
+
+    def test_presets_build_valid_runspecs(self):
+        for name in PRESETS:
+            cells = get_preset(name).cells()
+            assert cells, name
+            for c in cells:
+                assert isinstance(c.spec, RunSpec)
+                assert isinstance(c.spec.precision, PrecisionPolicy)
+
+    def test_roofline_preset_covers_all_archs_plus_multipod(self):
+        from repro.configs import ARCH_NAMES
+
+        cells = get_preset("roofline-all-archs").cells()
+        assert len(cells) >= len(ARCH_NAMES) + 1
+        assert {c.spec.arch for c in cells} == set(ARCH_NAMES)
+        assert any(c.spec.mesh == "2x16x16" for c in cells)
+        assert all(c.spec.workload == "dryrun" for c in cells)
+
+    def test_ci_tiny_dryrun_cells_alias_roofline_cells(self):
+        """CI's dryrun cells must be content-identical to the grid's."""
+        roof = {c.key for c in get_preset("roofline-all-archs").cells()}
+        tiny = get_preset("ci-tiny").cells()
+        dry = [c for c in tiny if c.spec.workload == "dryrun"]
+        assert len(dry) == 2 and all(c.key in roof for c in dry)
+        assert any(c.spec.workload == "fl-sim" for c in tiny)
+
+
+class TestStore:
+    def test_append_reload_last_wins(self, tmp_path):
+        p = str(tmp_path / "s.jsonl")
+        st = ResultsStore(p)
+        st.append({"key": "k1", "status": "error", "metrics": {}})
+        st.append({"key": "k1", "status": "ok", "metrics": {"v": 1}})
+        st2 = ResultsStore(p)
+        assert st2.has_ok("k1") and st2.get("k1")["metrics"] == {"v": 1}
+
+    def test_torn_tail_line_is_dropped(self, tmp_path):
+        p = str(tmp_path / "s.jsonl")
+        st = ResultsStore(p)
+        st.append({"key": "k1", "status": "ok", "metrics": {}})
+        with open(p, "a") as f:
+            f.write('{"key": "k2", "status": "o')     # crash mid-write
+        st2 = ResultsStore(p)
+        assert st2.has_ok("k1") and st2.get("k2") is None
+
+
+class TestResumability:
+    def test_interrupt_resume_skips_completed_and_tables_identical(
+            self, tmp_path):
+        """The satellite contract: kill a sweep mid-grid, rerun, completed
+        cells are skipped (stored rows untouched, keys stable), and the final
+        rendered tables are byte-identical to an uninterrupted run."""
+        sweep = tiny_fl_sweep()
+
+        # uninterrupted reference run
+        ref_store = ResultsStore(str(tmp_path / "ref.jsonl"))
+        SweepRunner(sweep, ref_store, quiet=True).run()
+
+        # interrupted run: 2 cells, then "killed"
+        store = ResultsStore(str(tmp_path / "cut.jsonl"))
+        first = SweepRunner(sweep, store, quiet=True).run(max_cells=2)
+        assert len(first["ran"]) == 2 and len(first["skipped"]) == 0
+        frozen = {k: json.dumps(store.get(k), sort_keys=True)
+                  for k in first["ran"]}
+
+        # resume in a fresh store object (fresh process semantics)
+        store2 = ResultsStore(str(tmp_path / "cut.jsonl"))
+        second = SweepRunner(sweep, store2, quiet=True).run()
+        assert sorted(second["skipped"]) == sorted(first["ran"])
+        assert len(second["ran"]) == 1
+        for k, blob in frozen.items():      # completed rows were not redone
+            assert json.dumps(store2.get(k), sort_keys=True) == blob
+
+        # byte-identical tables (wall-clock fields never reach the table)
+        assert render_tables(sweep, store2) == render_tables(sweep, ref_store)
+
+        exp_a, exp_b = str(tmp_path / "a.md"), str(tmp_path / "b.md")
+        write_experiments(exp_a, sweep, store2)
+        write_experiments(exp_b, sweep, ref_store)
+        assert open(exp_a, "rb").read() == open(exp_b, "rb").read()
+
+    def test_force_reruns_completed_cells(self, tmp_path):
+        """Benchmark mode: force ignores the store but still records."""
+        sweep = tiny_fl_sweep()
+        store = ResultsStore(str(tmp_path / "f.jsonl"))
+        SweepRunner(sweep, store, quiet=True).run()
+        again = SweepRunner(sweep, store, quiet=True).run(force=True)
+        assert len(again["ran"]) == len(sweep.cells())
+        assert not again["skipped"]
+
+    def test_error_cells_recorded_and_retried(self, tmp_path):
+        bad = Sweep(name="bad",
+                    base={"arch": "no-such-arch", "workload": "fl-sim",
+                          "rounds": 1, "options": {"n_clients": 2}})
+        store = ResultsStore(str(tmp_path / "bad.jsonl"))
+        out = SweepRunner(bad, store, quiet=True).run()
+        assert len(out["failed"]) == 1
+        key = out["failed"][0]
+        assert store.get(key)["status"] == "error"
+        # default: errors re-run; --keep-failed semantics: skipped
+        out2 = SweepRunner(bad, store, quiet=True).run(rerun_failed=False)
+        assert out2["skipped"] == [key] and not out2["failed"]
+
+
+class TestMarkers:
+    def test_insert_then_replace_idempotent(self, tmp_path):
+        text = "# EXPERIMENTS\n\n## §Roofline\n\nprose stays\n"
+        t1 = update_markers(text, "x", "TABLE v1")
+        assert "TABLE v1" in t1 and "prose stays" in t1
+        t2 = update_markers(t1, "x", "TABLE v2")
+        assert "TABLE v2" in t2 and "TABLE v1" not in t2
+        assert t2 == update_markers(t2, "x", "TABLE v2")
+
+    def test_inline_markers_replace_in_place(self):
+        text = ("head\n<!-- sweep:x:begin -->\nold\n<!-- sweep:x:end -->\n"
+                "tail\n")
+        out = update_markers(text, "x", "new")
+        assert out == ("head\n<!-- sweep:x:begin -->\nnew\n"
+                       "<!-- sweep:x:end -->\ntail\n")
+
+    def test_dangling_marker_refused(self):
+        """A half-present marker pair must raise, not splice over prose."""
+        no_end = "head\n<!-- sweep:x:begin -->\nold\nprose\n"
+        with pytest.raises(ValueError):
+            update_markers(no_end, "x", "new")
+        swapped = ("<!-- sweep:x:end -->\nmid\n<!-- sweep:x:begin -->\n")
+        with pytest.raises(ValueError):
+            update_markers(swapped, "x", "new")
+
+    def test_partial_store_reads_as_partial(self, tmp_path):
+        sweep = tiny_fl_sweep()
+        store = ResultsStore(str(tmp_path / "p.jsonl"))
+        SweepRunner(sweep, store, quiet=True).run(max_cells=1)
+        body = render_tables(sweep, store)
+        assert "Incomplete cells" in body and "pending" in body
+
+
+class TestSubprocessCell:
+    def test_train_cell_runs_in_subprocess_with_wire_metrics(self, tmp_path):
+        """train cells run out-of-process (the runner provisions the 2 fake
+        host devices the 2x1 mesh needs) and report the grad wire bytes."""
+        sweep = Sweep(
+            name="sub",
+            base={"arch": "yi-6b", "workload": "train", "mesh": "2x1",
+                  "smoke": True, "batch": 1, "seq": 8, "rounds": 1,
+                  "precision": {"comm": 8},
+                  "options": {"lr": 0.05, "quiet": True}})
+        store = ResultsStore(str(tmp_path / "sub.jsonl"))
+        out = SweepRunner(sweep, store, timeout_s=900, quiet=True).run()
+        assert not out["failed"], store.rows()
+        rec = store.get(out["ran"][0])
+        assert rec["status"] == "ok"
+        wire = rec["metrics"]["wire"]
+        assert wire["comm_bits"] == 8 and wire["wire_dtype"] == "int16"
+        assert (rec["metrics"]["wire"]["replicated_bytes_wire"]
+                < wire["replicated_bytes_f32"])

@@ -2,6 +2,13 @@
 ``serve-precision-ablation`` sweep preset (kv-cache axis pinned to f32 for
 the CI smoke; the full kv ablation is the preset's default grid).
 
+Two regressions are asserted on every run:
+
+* the int8 weight path streams < 1/3 the f32 weight bytes per decode step;
+* the PAGED KV cache reserves strictly fewer bytes than the contiguous
+  slab on the mixed-length workload (ragged prompts + staggered max_new —
+  the workload where per-slot ``s_max`` provisioning is pure waste).
+
 Off-TPU the kernels run in interpret mode, so the tok/s numbers validate
 plumbing and the byte ratios are exact storage facts; real rates need a TPU.
 Regenerate the full §Perf serving ladder with ``repro-sweep run
@@ -19,7 +26,8 @@ STEPS = 12
 
 def main():
     sweep = get_preset("serve-precision-ablation", steps=STEPS, arch=ARCH,
-                       weights=(32, 7), kv_cache=(32,))
+                       weights=(32, 7), kv_cache=(32,),
+                       kv_layout=("paged", "contiguous"))
     # force=True: this is the CI regression smoke — always exercise the
     # driver, never replay the store.  The recording goes to an ignored
     # scratch dir so repeated runs don't dirty the committed grid store.
@@ -31,22 +39,34 @@ def main():
     with bench_output("serving") as jrows:
         for cell in sweep.cells():
             m = store.get(cell.key)["metrics"]
-            tag = "f32" if m["bits"] >= 32 else "int8"
+            tag = ("f32" if m["bits"] >= 32 else "int8") + "-" + m["kv_layout"]
             rows[tag] = m
             us_per_step = m["wall_s"] / max(m["decode_steps"], 1) * 1e6
             emit(f"serving_{ARCH}_smoke_{tag}", us_per_step,
                  f"tok_s={m['tok_s']:.1f};"
                  f"bytes_step={m['bytes_per_step_packed']};"
+                 f"kv_bytes={m['kv_bytes']};"
                  f"completed={m['completed']};admitted={m['admitted']}")
-        ratio = (rows["int8"]["bytes_per_step_packed"]
-                 / max(rows["f32"]["bytes_per_step_f32"], 1))
+        ratio = (rows["int8-paged"]["bytes_per_step_packed"]
+                 / max(rows["f32-paged"]["bytes_per_step_f32"], 1))
         emit(f"serving_{ARCH}_smoke_packed_vs_f32", ratio * 100.0,
-             f"packed_bytes={rows['int8']['bytes_per_step_packed']};"
-             f"f32_bytes={rows['f32']['bytes_per_step_f32']}")
+             f"packed_bytes={rows['int8-paged']['bytes_per_step_packed']};"
+             f"f32_bytes={rows['f32-paged']['bytes_per_step_f32']}")
         jrows.append(bench_row(f"serving_{ARCH}_smoke", "packed_vs_f32",
                                ratio, "ratio"))
+        kv_ratio = (rows["int8-paged"]["kv_bytes"]
+                    / max(rows["int8-contiguous"]["kv_bytes"], 1))
+        emit(f"serving_{ARCH}_smoke_paged_vs_contig_kv", kv_ratio * 100.0,
+             f"paged_kv={rows['int8-paged']['kv_bytes']};"
+             f"contig_kv={rows['int8-contiguous']['kv_bytes']};"
+             f"page={rows['int8-paged']['page_size']}")
+        jrows.append(bench_row(f"serving_{ARCH}_smoke", "paged_vs_contig_kv",
+                               kv_ratio, "ratio"))
     assert ratio < 1 / 3, (
         f"int8 serving path must stream < 1/3 the f32 weight bytes, got {ratio:.3f}")
+    assert kv_ratio < 1, (
+        f"paged KV footprint must be strictly below contiguous on the "
+        f"mixed-length workload, got {kv_ratio:.3f}")
     return rows
 
 

@@ -62,6 +62,14 @@ class ServeStats:
     bytes_per_step_f32: int      # same weights at f32
     packed_vs_f32: float         # packed / f32 byte ratio
     sample: list                 # first finished sequence's tokens
+    kv_layout: str = "contiguous"    # "paged" | "contiguous"
+    page_size: int = 0               # tokens per page (0 = contiguous)
+    kv_bytes: int = 0                # resident K/V bytes, this layout
+    kv_bytes_contiguous: int = 0     # what a contiguous cache would reserve
+    capacity_stops: int = 0          # sequences stopped AT CACHE CAPACITY
+                                     # (the anti-silent-clip guard firing)
+    deferred_admissions: int = 0     # admissions that waited for page reclaim
+    prompt_buckets: list = dataclasses.field(default_factory=list)
 
 
 def _weight_bytes(tree) -> int:
@@ -338,11 +346,25 @@ class Session:
         store int8/int16 ``QTensor`` codes, and ``policy.lazy`` keeps them
         packed through the ``quant_matmul`` kernel path.  ``overrides`` patch
         individual options (steps, requests, ...) for this call only.
+
+        KV-cache layout (``kv_layout`` option, default ``"paged"`` where the
+        family supports it): the paged layout allocates each request's pages
+        ON ADMIT for its full capacity (prompt + max_new, page-rounded) from
+        a shared pool sized by ``pool_pages`` (default: the largest
+        ``batch`` concurrent requests), reclaims them on completion, and
+        DEFERS admissions the pool cannot hold until a completion frees
+        pages.  Either layout enforces capacity: a slot whose cache fills up
+        is stopped and counted in ``capacity_stops`` instead of silently
+        clipping its context.  Prompts are right-padded to power-of-two
+        buckets so one compiled prefill serves every prompt length in the
+        bucket (``vary_prompt`` draws ragged prompt lengths).
         """
         import jax
         import jax.numpy as jnp
 
         from repro.core.quantization import default_exempt
+        from repro.launch.paging import (SlotPager, kv_cache_bytes,
+                                         pages_for, set_page_tables)
         from repro.launch.steps import (
             build_cached_prefill, build_decode_step, init_global_caches)
         from repro.models.common import pack_params_for_policy
@@ -358,6 +380,7 @@ class Session:
         requests = o.get("requests")
         max_new = o.get("max_new")
         quiet = bool(o.get("quiet", False))
+        vary_prompt = bool(o.get("vary_prompt", False))
         seed = spec.seed
 
         if attn_impl not in ("ref", "flash"):
@@ -370,6 +393,41 @@ class Session:
                 print(msg)
 
         cfg, model, mesh, axes = self.cfg, self.model, self.mesh, self.axes
+
+        # ---- KV layout ---------------------------------------------------
+        kv_layout_opt = o.get("kv_layout")
+        kv_layout = (kv_layout_opt if kv_layout_opt is not None
+                     else "paged" if model.supports_paged_kv
+                     else "contiguous")
+        if kv_layout not in ("paged", "contiguous"):
+            raise ValueError(f"kv_layout must be 'paged' or 'contiguous', "
+                             f"got {kv_layout!r}")
+        if kv_layout == "paged" and not model.supports_paged_kv:
+            kv_layout = "contiguous"    # SSM: O(1) state, nothing to page
+        if kv_layout == "paged":
+            from repro.launch.mesh import tp_size
+            from repro.models.attention import kv_cache_seq_parallel
+            from repro.models.transformer import attn_dims
+
+            if kv_cache_seq_parallel(attn_dims(cfg, tp_size(mesh, axes))):
+                # the driver's host page allocator covers the kv-sharded /
+                # tp=1 layouts; sequence-parallel paged decode is exercised
+                # at the step level (build_decode_step).  A defaulted layout
+                # falls back so tp>1 kv-replicated serving keeps working;
+                # only an EXPLICIT paged request errors.
+                if kv_layout_opt is None:
+                    kv_layout = "contiguous"
+                else:
+                    raise ValueError(
+                        "kv_layout='paged' is not supported by the serving "
+                        "driver on sequence-parallel (kv-replicated, tp>1) "
+                        "meshes; drop the option to fall back to contiguous "
+                        "or drive build_decode_step directly")
+        page_size = o.get("page_size")
+        if page_size is None:
+            page_size = next(p for p in (16, 8, 4, 2, 1) if s_max % p == 0)
+        page_size = int(page_size)
+
         params = self.init_params()
 
         # ---- pack to the policy's storage (norm/router exemptions as in
@@ -386,45 +444,89 @@ class Session:
         else:
             say(f"params: {raw_bytes/1e6:.1f} MB f32 (unpacked baseline)")
 
-        # ---- compiled steps ---------------------------------------------
-        ptree = jax.eval_shape(lambda: qparams)
-        ss = build_decode_step(model, mesh, axes, params_tree=ptree,
-                               s_max=s_max, batch_global=batch, policy=policy)
-        pf = build_cached_prefill(model, mesh, axes, params_tree=ptree,
-                                  s_max=s_max, s_prompt=prompt_len,
-                                  batch_global=batch, attn_impl=impl,
-                                  policy=policy, bos_id=BOS_ID)
-        caches = init_global_caches(model, mesh, axes, s_max=s_max,
-                                    batch_global=batch,
-                                    dtype=policy.kv_cache_dtype())
-
         # ---- synthetic request queue ------------------------------------
-        budget = s_max - prompt_len - 1
         n_requests = requests if requests is not None else 2 * batch
         rng = np.random.RandomState(seed)
         # default cap: ~half the step budget, so completions (and therefore
-        # mid-flight admissions) actually happen within a demo-sized run
-        cap = max_new if max_new is not None else max(2, steps // 2)
-        cap = max(1, min(cap, budget))
-        queue = [
-            {"id": i,
-             "prompt": rng.randint(2, cfg.vocab_size, size=(prompt_len,)),
-             # staggered lengths so completions (and admissions) interleave
-             "max_new": int(rng.randint(max(1, cap // 2), cap + 1))}
-            for i in range(n_requests)
-        ]
+        # mid-flight admissions) actually happen within a demo-sized run.
+        # An EXPLICIT max_new is honored as asked — a request that outgrows
+        # its cache stops at capacity and is counted, never silently clipped.
+        if max_new is not None:
+            cap = max(1, int(max_new))
+        else:
+            cap = max(1, min(max(2, steps // 2), s_max - prompt_len - 1))
         needs_tokens = "tokens" in model.prefill_batch_spec(batch, prompt_len,
                                                            s_max)
+        queue = []
+        for i in range(n_requests):
+            plen = (int(rng.randint(max(1, prompt_len // 2), prompt_len + 1))
+                    if vary_prompt else prompt_len)
+            queue.append(
+                {"id": i,
+                 "prompt": rng.randint(2, cfg.vocab_size, size=(plen,)),
+                 "prompt_len": plen if needs_tokens else 0,
+                 # staggered lengths so completions (and admissions) interleave
+                 "max_new": int(rng.randint(max(1, cap // 2), cap + 1))})
+
+        def bucket_of(plen: int) -> int:
+            b = 4
+            while b < plen:
+                b *= 2
+            return min(b, s_max)
+
+        # ---- caches + pager ---------------------------------------------
+        if kv_layout == "paged":
+            def req_pages(req):
+                tokens_cap = min(req["prompt_len"] + req["max_new"], s_max)
+                return pages_for(tokens_cap, page_size)
+
+            pool_pages = o.get("pool_pages")
+            if pool_pages is None:
+                # hold the `batch` largest concurrent requests — strictly
+                # below the contiguous batch*s_max worst case on mixed loads
+                demand = sorted((req_pages(r) for r in queue), reverse=True)
+                pool_pages = max(sum(demand[:batch]), 1)
+            pool_pages = int(pool_pages)
+            pager = SlotPager.build(batch, s_max, page_size, pool_pages)
+            cache_kw = {"page_size": page_size, "pool_pages": pool_pages}
+        else:
+            pager = None
+            cache_kw = {}
+        caches = init_global_caches(model, mesh, axes, s_max=s_max,
+                                    batch_global=batch,
+                                    dtype=policy.kv_cache_dtype(), **cache_kw)
+        kv_bytes = kv_cache_bytes(caches)
+        kv_bytes_contig = kv_cache_bytes(jax.eval_shape(
+            lambda: init_global_caches(model, mesh, axes, s_max=s_max,
+                                       batch_global=batch,
+                                       dtype=policy.kv_cache_dtype())))
+
+        # ---- compiled steps ---------------------------------------------
+        ptree = jax.eval_shape(lambda: qparams)
+        ss = build_decode_step(model, mesh, axes, params_tree=ptree,
+                               s_max=s_max, batch_global=batch, policy=policy,
+                               attn_impl=attn_impl, **cache_kw)
+        pf_cache: dict = {}
+
+        def prefill_for(bucket: int):
+            if bucket not in pf_cache:
+                pf_cache[bucket] = build_cached_prefill(
+                    model, mesh, axes, params_tree=ptree, s_max=s_max,
+                    s_prompt=bucket, batch_global=batch, attn_impl=impl,
+                    policy=policy, bos_id=BOS_ID, with_prompt_lens=True,
+                    **cache_kw)
+            return pf_cache[bucket]
+
         d_front = cfg.d_frontend or cfg.d_model
         n_img = cfg.n_image_tokens or 1601
 
-        def prefill_batch(slots_to_fill):
+        def prefill_batch(slots_to_fill, bucket: int):
             """Assemble the (B, ...) prefill inputs; only masked slots matter."""
             b = {}
             if needs_tokens:
-                toks = np.ones((batch, prompt_len), np.int32)
+                toks = np.ones((batch, bucket), np.int32)
                 for s, req in slots_to_fill:
-                    toks[s] = req["prompt"]
+                    toks[s, : len(req["prompt"])] = req["prompt"]
                 b["tokens"] = jnp.asarray(toks)
             if cfg.family == "vlm":
                 key = jax.random.PRNGKey(seed + 101)
@@ -439,30 +541,60 @@ class Session:
         # ---- slot state (host side) -------------------------------------
         active = np.zeros((batch,), bool)
         remaining = np.zeros((batch,), np.int64)
+        slot_plen = np.zeros((batch,), np.int64)   # tokens cached at admit
+        slot_cap = np.full((batch,), s_max, np.int64)
         seqs = [[] for _ in range(batch)]
         finished = []
         cur_tok = jnp.full((batch, 1), BOS_ID, jnp.int32)
         admitted = completed = decoded = 0
+        capacity_stops = 0
+        deferred_ids: set = set()   # requests that waited at least once
 
         def admit():
             nonlocal caches, cur_tok, admitted
             free = [i for i in range(batch) if not active[i]]
-            if not free or not queue:
+            fill = []
+            while free and queue:
+                req = queue[0]
+                slot = free[0]
+                if pager is not None:
+                    tokens_cap = min(req["prompt_len"] + req["max_new"], s_max)
+                    if not pager.admit(slot, tokens_cap):
+                        # pool exhausted: wait for reclaim (counted once per
+                        # request, however many retries it takes)
+                        deferred_ids.add(req["id"])
+                        break
+                fill.append((free.pop(0), queue.pop(0)))
+            if not fill:
                 return
-            fill = [(s, queue.pop(0)) for s in free[: len(queue)]]
-            mask = np.zeros((batch,), bool)
-            for s, req in fill:
-                mask[s] = True
-            tok, caches = pf.fn(qparams, prefill_batch(fill), caches,
-                                jnp.asarray(mask))
-            tok = np.asarray(tok)
+            if pager is not None:
+                caches = set_page_tables(caches, pager.table)
             new_tok = np.array(cur_tok)
+            by_bucket: dict[int, list] = {}
             for s, req in fill:
-                active[s] = True
-                remaining[s] = req["max_new"]
-                seqs[s] = [int(tok[s, 0])]
-                new_tok[s] = tok[s]
-                admitted += 1
+                by_bucket.setdefault(bucket_of(len(req["prompt"])), []).append(
+                    (s, req))
+            for bucket, group in sorted(by_bucket.items()):
+                pf = prefill_for(bucket)
+                mask = np.zeros((batch,), bool)
+                plens = np.ones((batch,), np.int32)
+                for s, req in group:
+                    mask[s] = True
+                    plens[s] = len(req["prompt"])
+                tok, caches_new = pf.fn(qparams, prefill_batch(group, bucket),
+                                        caches, jnp.asarray(mask),
+                                        jnp.asarray(plens))
+                caches = caches_new
+                tok = np.asarray(tok)
+                for s, req in group:
+                    active[s] = True
+                    remaining[s] = req["max_new"]
+                    slot_plen[s] = req["prompt_len"]
+                    slot_cap[s] = (pager.slot_capacity(s) if pager is not None
+                                   else s_max)
+                    seqs[s] = [int(tok[s, 0])]
+                    new_tok[s] = tok[s]
+                    admitted += 1
             cur_tok = jnp.asarray(new_tok)
 
         admit()
@@ -478,8 +610,20 @@ class Session:
                 seqs[s].append(int(tok_h[s, 0]))
                 decoded += 1
                 remaining[s] -= 1
-                if remaining[s] <= 0 or len(seqs[s]) >= budget:
+                # tokens cached so far (the newest token is not written until
+                # it is fed back)
+                cached = slot_plen[s] + len(seqs[s]) - 1
+                done = remaining[s] <= 0
+                if not done and cached >= slot_cap[s]:
+                    # cache full: STOP the slot — decoding on would drop K/V
+                    # writes and silently degrade the context (the old
+                    # driver's failure mode)
+                    done = True
+                    capacity_stops += 1
+                if done:
                     active[s] = False
+                    if pager is not None:
+                        pager.evict(s)
                     finished.append(seqs[s])
                     completed += 1
                     done_any = True
@@ -487,6 +631,10 @@ class Session:
                 decoded_at_t0 = decoded       # step 1 ran pre-timer (compile)
             if step_i >= steps or (not active.any() and not queue):
                 break
+            if done_any and pager is not None:
+                # cleared table rows make the evicted slots' future writes
+                # drop instead of landing on reclaimed pages
+                caches = set_page_tables(caches, pager.table)
             cur_tok = jnp.asarray(tok_h)      # each slot feeds its own last token
             if done_any and queue:
                 admit()                       # mid-flight slot reuse: overwrites
@@ -504,14 +652,26 @@ class Session:
             bytes_per_step_packed=q_bytes, bytes_per_step_f32=f32_bytes,
             packed_vs_f32=q_bytes / max(f32_bytes, 1),
             sample=(finished[0] if finished else seqs[0])[:16],
+            kv_layout=kv_layout,
+            page_size=page_size if kv_layout == "paged" else 0,
+            kv_bytes=kv_bytes, kv_bytes_contiguous=kv_bytes_contig,
+            capacity_stops=capacity_stops,
+            deferred_admissions=len(deferred_ids),
+            prompt_buckets=sorted(pf_cache),
         )
         say(f"decoded {stats.decoded_tokens} tokens over {stats.decode_steps} "
             f"steps x {batch} slots in {wall:.3f}s = {stats.tok_s:.1f} tok/s "
             f"(interpret-mode numbers off-TPU)")
         say(f"admitted {stats.admitted} / completed {stats.completed} sequences "
-            f"(continuous batching over {n_requests} requests)")
+            f"(continuous batching over {n_requests} requests; "
+            f"{capacity_stops} capacity stops, "
+            f"{len(deferred_ids)} deferred admissions)")
         say(f"weight stream: {q_bytes/1e6:.1f} MB/step packed vs "
             f"{f32_bytes/1e6:.1f} MB/step f32 -> ratio {stats.packed_vs_f32:.3f}")
+        if kv_layout == "paged":
+            say(f"kv cache: {kv_bytes/1e6:.2f} MB paged pool "
+                f"(page={page_size}, buckets={stats.prompt_buckets}) vs "
+                f"{kv_bytes_contig/1e6:.2f} MB contiguous")
         say(f"sample: {stats.sample}")
         return stats
 

@@ -168,7 +168,7 @@ def cache_specs(caches, axes: AxisCtx, cfg):
     channels.  Cross-attention K/V (full-memory, per shard) split the KV
     head dim only when KV is sharded.
     """
-    from repro.models.attention import KVCache
+    from repro.models.attention import KVCache, PagedKVCache
     from repro.models.ssm import SSMCache
 
     model = axes.model_axis
@@ -182,7 +182,24 @@ def cache_specs(caches, axes: AxisCtx, cfg):
             return P(None, lead, None, model, None)
         return P(None, lead, model, None, None)   # sequence-parallel cache
 
+    def paged_kv(c: PagedKVCache) -> PagedKVCache:
+        # pools: (L, N_pool, page, KV_local, hd); tables: (L, B, n_pmax).
+        # kv-sharded: every shard holds all pages of its KV-head slice and
+        # the SAME table.  Sequence-parallel: each shard owns a private pool
+        # + table covering its s_max/tp position slice, so pool AND table
+        # shard over the model axis.
+        if kv_sharded(c.k_pages.shape[3]):
+            pool = P(None, None, None, model, None)
+            table = P(None, lead, None)
+        else:
+            pool = P(None, model, None, None, None)
+            table = P(None, lead, model)
+        return PagedKVCache(k_pages=pool, v_pages=pool, page_table=table,
+                            length=P(None, lead))
+
     def one(c):
+        if isinstance(c, PagedKVCache):
+            return paged_kv(c)
         if isinstance(c, KVCache):
             # per-sequence lengths: (L, B) — batch-local like the K/V slabs
             return KVCache(k=self_kv(c.k), v=self_kv(c.v),
@@ -200,4 +217,5 @@ def cache_specs(caches, axes: AxisCtx, cfg):
                    (None,) * (c.ndim - 2)))
 
     return jax.tree_util.tree_map(
-        one, caches, is_leaf=lambda x: isinstance(x, (KVCache, SSMCache)))
+        one, caches,
+        is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache, SSMCache)))

@@ -1,12 +1,22 @@
-"""Pallas TPU kernel: causal flash attention forward (online softmax).
+"""Pallas TPU kernels: flash attention forward + batched paged flash-decode.
 
-Lowering target for the 32k-prefill shapes: no S x S materialization; running
-(max, sum, acc) live in VMEM scratch across the KV grid dimension (TPU grids
-execute the last axis sequentially, so scratch carries state between k-steps).
-Fully-masked (k-block above the diagonal) tiles are skipped with ``pl.when``
-— for causal attention that halves the work.
+``flash_attention_kernel`` is the prefill path: causal online softmax with no
+S x S materialization; running (max, sum, acc) live in VMEM scratch across
+the KV grid dimension (TPU grids execute the last axis sequentially, so
+scratch carries state between k-steps).  Fully-masked (k-block above the
+diagonal) tiles are skipped with ``pl.when`` — for causal attention that
+halves the work.
 
-Matches :func:`repro.kernels.ref.flash_attention_ref` to fp32 tolerance.
+``flash_decode_kernel`` is the long-context decode path: one query token per
+slot against a PAGED KV cache.  The per-slot page table rides in as a
+scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec
+index map dereferences it to DMA exactly the pages each slot owns — K/V
+stream page-by-page from HBM in logical order, honoring per-sequence lengths,
+with the same online softmax carried in scratch.  It returns unnormalized
+``(acc, m, l)`` partials so sequence-parallel launches can merge shards with
+a distributed online softmax.
+
+Both match their jnp references to fp32 tolerance.
 """
 
 from __future__ import annotations
@@ -103,3 +113,111 @@ def flash_attention_kernel(q, k, v, *, causal: bool = True,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Batched paged flash-decode
+# ---------------------------------------------------------------------------
+
+
+def _decode_body(pt_ref, len_ref, q_ref, k_ref, v_ref, acc_out, m_out, l_out,
+                 m_ref, l_ref, acc_ref, *, scale: float, page: int,
+                 n_pmax: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip pages past the slot's length and unallocated (-1) table entries;
+    # the index map clamps -1 to page 0 for the DMA, but the compute guard
+    # means that page's contents are never read into the softmax.
+    pid = pt_ref[b * n_pmax + j]
+    valid = jnp.logical_and(pid >= 0, j * page < len_ref[b])
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, page)
+        cols = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < len_ref[b], s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pmax - 1)
+    def _finish():
+        acc_out[0, 0] = acc_ref[...]
+        m_out[0, 0] = m_ref[...]
+        l_out[0, 0] = l_ref[...]
+
+
+def flash_decode_kernel(q, k_pages, v_pages, page_table, lengths, *,
+                        interpret=False):
+    """One decode token per slot against a paged KV cache.
+
+    ``q``: (B, KV, G, hd) — q heads grouped under their KV head (GQA).
+    ``k_pages``/``v_pages``: (N_pool, page, KV, hd) shared page pool (f32 or
+    bf16 — the ``PrecisionPolicy.kv_cache`` storage dtype).
+    ``page_table``: (B, n_pmax) int32, -1 = unallocated.
+    ``lengths``: (B,) int32 — valid tokens per slot in local coordinates.
+
+    Grid is (B, KV, n_pmax) with the page axis innermost (sequential on TPU,
+    so the online-softmax scratch carries across a slot's pages); the page
+    table and lengths are scalar-prefetched so each k/v BlockSpec can DMA the
+    pool row the table names.  Returns UNNORMALIZED fp32 partials
+    ``(acc (B,KV,G,hd), m (B,KV,G,1), l (B,KV,G,1))`` — normalize with
+    ``acc / max(l, eps)``, or pmax/psum-merge across sequence-parallel shards
+    first.
+    """
+    B, KV, G, hd = q.shape
+    page = k_pages.shape[1]
+    n_pmax = page_table.shape[1]
+    scale = hd ** -0.5
+
+    def q_map(b, h, j, pt, ln):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, j, pt, ln):
+        return (jnp.maximum(pt[b * n_pmax + j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), q_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), q_map),
+            pl.BlockSpec((1, 1, G, 1), q_map),
+            pl.BlockSpec((1, 1, G, 1), q_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max
+            pltpu.VMEM((G, 1), jnp.float32),    # running sum
+            pltpu.VMEM((G, hd), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_body, scale=scale, page=page,
+                          n_pmax=n_pmax),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32)],
+        interpret=interpret,
+    )(page_table.reshape(-1), lengths, q, k_pages, v_pages)

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention import (flash_attention_kernel,
+                                           flash_decode_kernel)
 from repro.kernels.quant_matmul import quant_matmul_kernel
 from repro.kernels.sr_quant import sr_quant_fake_kernel, sr_quant_pack_kernel
 
@@ -119,6 +120,30 @@ def flash_attention(q, k, v, causal: bool = True):
                                  blocks=(bq, bk), s_valid=S,
                                  interpret=_interpret())
     return out[:, :S, :].reshape(B, H, S, D)
+
+
+@jax.jit
+def flash_paged_decode(q, k_pages, v_pages, page_table, lengths):
+    """Batched paged flash-decode: q (B, KVh, G, hd) against page pools.
+
+    ``k_pages``/``v_pages`` are (N_pool, page, KVh, hd) in the KV-cache
+    storage dtype (f32 or bf16); ``page_table`` (B, n_pmax) int32 with -1 for
+    unallocated pages; ``lengths`` (B,) valid tokens per slot (local
+    coordinates).  Returns UNNORMALIZED fp32 partials ``(acc, m, l)`` so
+    sequence-parallel callers can merge shards before normalizing with
+    ``acc / max(l, eps)``.
+
+    G (queries per KV head) is padded to the fp32 sublane minimum (8) for TPU
+    lowering; the padded rows are computed on garbage and sliced off.
+    """
+    B, KV, G, hd = q.shape
+    g_pad = max(G, 8)
+    if g_pad != G:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - G), (0, 0)))
+    acc, m, l = flash_decode_kernel(
+        q, k_pages, v_pages, page_table.astype(jnp.int32),
+        lengths.astype(jnp.int32), interpret=_interpret())
+    return acc[:, :, :G], m[:, :, :G], l[:, :, :G]
 
 
 # ---------------------------------------------------------------------------

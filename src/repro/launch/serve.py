@@ -26,24 +26,37 @@ def run_serve(arch: str, *, smoke: bool = True, steps: int = 32, batch: int = 4,
               s_max: int = 64, prompt_len: int = 8, serve_bits: int = 7,
               attn_impl: str = "ref", mesh: str = "1x1", seed: int = 0,
               requests: int | None = None, max_new: int | None = None,
+              kv_layout: str | None = None, page_size: int | None = None,
+              pool_pages: int | None = None, vary_prompt: bool = False,
               quiet: bool = False) -> ServeStats:
     """Compatibility wrapper: builds a RunSpec and drives ``Session.serve``.
 
     ``serve_bits >= 32`` serves raw f32 weights (the baseline the packed
     ratio is measured against); ``< 32`` maps to a lazy packed
     :class:`~repro.api.PrecisionPolicy` (int8/int16 ``QTensor`` storage,
-    ``quant_matmul`` decode path).
+    ``quant_matmul`` decode path).  ``kv_layout="paged"`` (the default for
+    attention families) serves from the paged KV cache: ``pool_pages`` pages
+    of ``page_size`` tokens shared across slots, allocated per request on
+    admit and reclaimed on completion.
     """
     from repro.api import PrecisionPolicy, RunSpec, Session
 
     precision = (PrecisionPolicy(weights=serve_bits, lazy=True)
                  if serve_bits < 32 else PrecisionPolicy.full_precision())
+    options = {"steps": steps, "s_max": s_max, "prompt_len": prompt_len,
+               "attn_impl": attn_impl, "requests": requests,
+               "max_new": max_new, "quiet": quiet}
+    if kv_layout is not None:
+        options["kv_layout"] = kv_layout
+    if page_size is not None:
+        options["page_size"] = page_size
+    if pool_pages is not None:
+        options["pool_pages"] = pool_pages
+    if vary_prompt:
+        options["vary_prompt"] = True
     spec = RunSpec(
         arch=arch, workload="serve", mesh=mesh, smoke=smoke, seed=seed,
-        batch=batch, seq=s_max, precision=precision,
-        options={"steps": steps, "s_max": s_max, "prompt_len": prompt_len,
-                 "attn_impl": attn_impl, "requests": requests,
-                 "max_new": max_new, "quiet": quiet})
+        batch=batch, seq=s_max, precision=precision, options=options)
     return Session(spec).serve()
 
 
@@ -66,12 +79,25 @@ def main(argv=None):
                     help="queue size (default 2x batch)")
     ap.add_argument("--max-new", type=int, default=None,
                     help="upper bound on per-request generation length")
+    ap.add_argument("--kv-layout", choices=("paged", "contiguous"),
+                    default=None, help="KV-cache layout (default: paged "
+                    "where the family supports it)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="shared page-pool size (default: the batch largest "
+                    "queued requests)")
+    ap.add_argument("--vary-prompt", action="store_true",
+                    help="draw ragged prompt lengths (exercises the "
+                    "prompt-length buckets)")
     args = ap.parse_args(argv)
     return run_serve(
         args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
         s_max=args.s_max, prompt_len=args.prompt_len,
         serve_bits=args.serve_bits, attn_impl=args.attn_impl, mesh=args.mesh,
-        seed=args.seed, requests=args.requests, max_new=args.max_new)
+        seed=args.seed, requests=args.requests, max_new=args.max_new,
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        pool_pages=args.pool_pages, vary_prompt=args.vary_prompt)
 
 
 if __name__ == "__main__":

@@ -249,15 +249,31 @@ def _greedy_pick(axes: AxisCtx, tp: int, vl: int, logits):
     return nxt[:, None]
 
 
+def _cache_kwargs(page_size, pool_pages) -> dict:
+    """init_caches kwargs for the requested KV layout (paged iff page_size)."""
+    if page_size is None:
+        return {}
+    return {"page_size": int(page_size),
+            "pool_pages": None if pool_pages is None else int(pool_pages)}
+
+
 def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
                       params_tree=None, s_max: int, batch_global: int,
-                      policy=None, lazy_quant: bool | None = None):
+                      policy=None, lazy_quant: bool | None = None,
+                      page_size: int | None = None,
+                      pool_pages: int | None = None, attn_impl: str = "ref"):
     """One-token decode step (greedy sampling over vocab-parallel logits).
 
     ``policy`` (:class:`repro.api.precision.PrecisionPolicy`): with
     ``policy.lazy``, packed ``QTensor`` weights stay int8 through the matmuls
     (quant_matmul kernel dispatch) instead of being dequantized on use.
     ``lazy_quant`` is the deprecated boolean form.
+
+    ``page_size`` switches the KV caches to the PAGED layout (shared
+    per-shard pool of ``pool_pages`` pages + per-slot page tables —
+    :class:`~repro.models.attention.PagedKVCache`); ``attn_impl="flash"``
+    then routes decode attention through the batched flash-decode Pallas
+    kernel instead of the (bitwise slab-equivalent) gather reference.
     """
     policy = _resolve_policy(policy, lazy_quant)
     cfg = model.cfg
@@ -269,7 +285,8 @@ def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
     def local_decode(params, batch, caches):
         pc = ParamCtx.from_policy(axes, policy,
                                   compute_dtype=_compute_dtype(cfg))
-        logits, new_caches = model.decode_step(pc, params, batch, caches)
+        logits, new_caches = model.decode_step(pc, params, batch, caches,
+                                               attn_impl=attn_impl)
         return _greedy_pick(axes, tp, vl, logits), new_caches
 
     if params_tree is None:
@@ -280,7 +297,8 @@ def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
     param_specs = tree_param_specs(params_tree, cfg, axes, fsdp)
     b_local = batch_global // max(_batch_size(mesh, axes), 1)
     caches_shape = jax.eval_shape(
-        functools.partial(model.init_caches, b_local, s_max, tp))
+        functools.partial(model.init_caches, b_local, s_max, tp,
+                          **_cache_kwargs(page_size, pool_pages)))
     c_specs = cache_specs(caches_shape, axes, cfg)
     bspec_tree = model.decode_batch_spec(batch_global, s_max)
     bspecs = batch_specs(bspec_tree, axes)
@@ -295,7 +313,9 @@ def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
 
 
 def init_global_caches(model: Model, mesh, axes: AxisCtx, *, s_max: int,
-                       batch_global: int, dtype=jnp.float32):
+                       batch_global: int, dtype=jnp.float32,
+                       page_size: int | None = None,
+                       pool_pages: int | None = None):
     """Allocate the GLOBAL decode caches for a launch.
 
     ``model.init_caches`` returns per-shard LOCAL shapes (what the mapped
@@ -304,23 +324,42 @@ def init_global_caches(model: Model, mesh, axes: AxisCtx, *, s_max: int,
     KV cache stores S_max/tp per shard but S_max globally.  Passing the
     local-shaped tree as the global array silently truncates the cache on
     tp > 1 launches; always go through this helper (or ``globalize``).
+
+    ``page_size``/``pool_pages`` select the paged KV layout; its page tables
+    start all-unallocated (-1), everything else zeroed.
     """
+    from repro.models.attention import PagedKVCache
+
     tp = _size(mesh, axes.model_axis)
     b_local = batch_global // max(_batch_size(mesh, axes), 1)
     shapes = jax.eval_shape(
-        functools.partial(model.init_caches, b_local, s_max, tp, dtype=dtype))
+        functools.partial(model.init_caches, b_local, s_max, tp, dtype=dtype,
+                          **_cache_kwargs(page_size, pool_pages)))
     specs = cache_specs(shapes, axes, model.cfg)
     g = globalize(shapes, specs, mesh)
+
+    def alloc(c):
+        if isinstance(c, PagedKVCache):
+            return PagedKVCache(
+                jnp.zeros(c.k_pages.shape, c.k_pages.dtype),
+                jnp.zeros(c.v_pages.shape, c.v_pages.dtype),
+                jnp.full(c.page_table.shape, -1, c.page_table.dtype),
+                jnp.zeros(c.length.shape, c.length.dtype))
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), c,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
     return jax.tree_util.tree_map(
-        lambda s: jnp.zeros(s.shape, s.dtype), g,
-        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        alloc, g, is_leaf=lambda x: isinstance(x, PagedKVCache))
 
 
 def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
                          params_tree=None, s_max: int, s_prompt: int,
                          batch_global: int, attn_impl: str = "auto",
                          policy=None, lazy_quant: bool | None = None,
-                         bos_id: int = 1):
+                         bos_id: int = 1, page_size: int | None = None,
+                         pool_pages: int | None = None,
+                         with_prompt_lens: bool = False):
     """Prefill-into-slots step for continuous batching.
 
     The jitted fn signature is ``(params, batch, caches, slot_mask) ->
@@ -329,40 +368,37 @@ def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
     scan for SSM, encoder + cross-K/V fill for enc-dec/VLM) over a fresh
     zeroed cache, then merges ONLY the slots selected by ``slot_mask`` into
     the live caches — so new requests join a mid-flight batch without
-    disturbing the sequences still decoding in the other slots.
+    disturbing the sequences still decoding in the other slots.  Paged
+    caches merge at page granularity through the live page tables, which the
+    driver must have populated for the admitted slots BEFORE this call.
 
     ``attn_impl="flash"`` routes the prompt self-attention through the
-    Pallas flash-attention kernel.
+    Pallas flash-attention kernel.  ``with_prompt_lens=True`` appends a
+    ``prompt_lens (B,)`` argument — prompts right-padded to the ``s_prompt``
+    bucket keep their true per-slot lengths (cache stamps, last-position
+    logits), which is what makes one compiled prefill serve a whole bucket.
     """
     policy = _resolve_policy(policy, lazy_quant)
     cfg = model.cfg
     tp = _size(mesh, axes.model_axis)
     fsdp = _fsdp_size(mesh, axes)
+    from repro.models.attention import fresh_slot_caches, merge_slot_caches
     from repro.models.transformer import padded_vocab_local
     vl = padded_vocab_local(cfg, tp)
     b_local = batch_global // max(_batch_size(mesh, axes), 1)
 
-    def merge_slots(old, new, slot_mask):
-        def one(o, n):
-            # every cache leaf is layer-stacked (L, B_local, ...); lengths
-            # are (L, B_local)
-            assert o.ndim >= 2 and o.shape[1] == b_local, o.shape
-            m = slot_mask.reshape((1, -1) + (1,) * (o.ndim - 2))
-            return jnp.where(m, n, o)
-
-        return jax.tree_util.tree_map(one, old, new)
-
-    def local_prefill(params, batch, caches, slot_mask):
+    def local_prefill(params, batch, caches, slot_mask, prompt_lens=None):
         pc = ParamCtx.from_policy(axes, policy,
                                   compute_dtype=_compute_dtype(cfg))
-        fresh = jax.tree_util.tree_map(jnp.zeros_like, caches)
-        logits, filled = model.prefill(pc, params, batch, fresh,
-                                       attn_impl=attn_impl)
+        kw = {"prompt_lens": prompt_lens} if prompt_lens is not None else {}
+        logits, filled = model.prefill(pc, params, batch,
+                                       fresh_slot_caches(caches),
+                                       attn_impl=attn_impl, **kw)
         if logits is None:      # enc-dec: decode starts from BOS
             tok = jnp.full((b_local, 1), bos_id, jnp.int32)
         else:
             tok = _greedy_pick(axes, tp, vl, logits)
-        return tok, merge_slots(caches, filled, slot_mask)
+        return tok, merge_slot_caches(caches, filled, slot_mask)
 
     if params_tree is None:
         params_tree = jax.eval_shape(
@@ -371,7 +407,8 @@ def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
             jax.ShapeDtypeStruct((2,), jnp.uint32))
     param_specs = tree_param_specs(params_tree, cfg, axes, fsdp)
     caches_shape = jax.eval_shape(
-        functools.partial(model.init_caches, b_local, s_max, tp))
+        functools.partial(model.init_caches, b_local, s_max, tp,
+                          **_cache_kwargs(page_size, pool_pages)))
     c_specs = cache_specs(caches_shape, axes, cfg)
     bspec_tree = model.prefill_batch_spec(batch_global, s_prompt, s_max)
     bspecs = batch_specs(bspec_tree, axes)
@@ -380,8 +417,10 @@ def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
     tok_spec = batch_specs(
         {"token": jax.ShapeDtypeStruct((batch_global, 1), jnp.int32)},
         axes)["token"]
-    sm = jax.shard_map(local_prefill, mesh=mesh,
-                       in_specs=(param_specs, bspecs, c_specs, mask_spec),
+    in_specs = [param_specs, bspecs, c_specs, mask_spec]
+    if with_prompt_lens:
+        in_specs.append(mask_spec)          # (B,) int32, same batch sharding
+    sm = jax.shard_map(local_prefill, mesh=mesh, in_specs=tuple(in_specs),
                        out_specs=(tok_spec, c_specs), check_vma=False)
     return ServeStep(fn=jax.jit(sm), param_specs=param_specs, cache_specs=c_specs,
                      param_shapes=params_tree, caches_shape=caches_shape)

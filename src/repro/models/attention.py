@@ -6,7 +6,10 @@ Three execution paths, all per-shard local code:
 * ``chunked`` — online-softmax over key/value chunks (flash-style in pure
   jnp, ``lax.scan`` over KV blocks): O(S) memory, used for 32k prefill and
   as the lowering target the Pallas ``flash_attention`` kernel mirrors.
-* ``decode``  — one query token against a KV cache.
+* ``decode``  — one query token against a KV cache: a contiguous
+  :class:`KVCache` slab or a :class:`PagedKVCache` (shared page pool +
+  per-slot page tables; ``impl="flash"`` walks the tables inside the
+  batched flash-decode Pallas kernel).
 
 Head sharding: q heads are split over the model axis; KV heads are split when
 ``n_kv % tp == 0`` and otherwise fully replicated per shard (cheap: KV
@@ -225,6 +228,33 @@ class KVCache(NamedTuple):
                             # so every slot carries its own clock)
 
 
+class PagedKVCache(NamedTuple):
+    """Paged decode cache: fixed-size pages allocated from a shared pool.
+
+    ``k_pages``/``v_pages``: ``(N_pool, page, KVl, hd)`` — this shard's page
+    pool, shared by every slot, so short and long prompts stop paying the
+    same ``s_max`` footprint.  ``page_table``: ``(B, n_pmax)`` int32 — slot
+    b's logical page ``j`` lives at pool row ``page_table[b, j]``; ``-1``
+    marks an unallocated page (reads of it are masked, writes to it are
+    dropped — a capacity overflow can never corrupt another slot's pages).
+    ``length``: ``(B,)`` int32 GLOBAL tokens cached per sequence.
+
+    Logical pages cover the SAME per-shard position range as the contiguous
+    layout (kv-sharded: all of ``s_max``; sequence-parallel: this shard's
+    ``s_max/tp`` slice), so the reference paged decode reconstructs the
+    contiguous view exactly and stays bitwise-equal to :class:`KVCache`.
+    """
+
+    k_pages: jnp.ndarray
+    v_pages: jnp.ndarray
+    page_table: jnp.ndarray
+    length: jnp.ndarray
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[-3]
+
+
 def kv_cache_seq_parallel(dims: AttnDims) -> bool:
     """When KV heads are replicated across tp, the cache is sharded over the
     SEQUENCE dim instead (the 'sequence-parallel KV cache'): without it each
@@ -240,62 +270,123 @@ def init_kv_cache(batch: int, s_max: int, dims: AttnDims, dtype=jnp.bfloat16):
                    jnp.zeros((batch,), jnp.int32))
 
 
-def prefill_kv_cache(pc: ParamCtx, cache: KVCache, k, v,
-                     dims: AttnDims) -> KVCache:
-    """Write a full prompt's K/V (B, S_p, KVl, hd) into a fresh cache.
+def init_paged_kv_cache(batch: int, s_max: int, dims: AttnDims,
+                        dtype=jnp.bfloat16, *, page_size: int,
+                        pool_pages: int | None = None) -> PagedKVCache:
+    """Paged cache with an all-unallocated page table (entries -1).
 
-    Works for both cache layouts: each shard keeps the slice of the prompt
-    that falls in its global-position range (the whole prompt when the cache
-    is not sequence-parallel).  Lengths are set to S_p for every sequence.
-    """
-    S_loc, S_p = cache.k.shape[1], k.shape[1]
-    base = (pc.ctx.tp_index() * S_loc) if kv_cache_seq_parallel(dims) else 0
-    gpos = base + jnp.arange(S_loc)
-    idx = jnp.clip(gpos, 0, S_p - 1)
-    sel = (gpos < S_p)[None, :, None, None]
-    knew = jnp.where(sel, jnp.take(k.astype(cache.k.dtype), idx, axis=1), cache.k)
-    vnew = jnp.where(sel, jnp.take(v.astype(cache.v.dtype), idx, axis=1), cache.v)
-    return KVCache(knew, vnew, jnp.full((k.shape[0],), S_p, jnp.int32))
-
-
-def decode_self_attention(pc: ParamCtx, path: str, p, x, cache: KVCache,
-                          dims: AttnDims):
-    """One-token decode: x (B, 1, D); returns (y, new_cache).
-
-    Per-sequence lengths: slot b's new token writes at ``length[b]`` and
-    attends to positions ``<= length[b]`` — sequences admitted at different
-    times (continuous batching) coexist in one step.
-
-    Two cache layouts:
-    * kv-sharded (n_kv % tp == 0): cache (B, S_max, KV/tp, hd) — classic.
-    * sequence-parallel: cache (B, S_max/tp, KV, hd); every shard computes
-      partial attention over its sequence slice and the partials merge with a
-      distributed online-softmax (pmax + psum) across the model axis.
+    ``pool_pages`` is the PER-SHARD pool size; the default matches the
+    contiguous footprint (``batch * s_local/page``) — drivers shrink it to
+    the actual workload demand, which is where the memory win comes from.
     """
     seqpar = kv_cache_seq_parallel(dims)
-    pos = cache.length[:, None]                      # (B, 1) per-seq positions
-    q, k, v = _project_qkv(pc, path, p, x, x, dims, pos, pos)
-    S_loc = cache.k.shape[1]
-    scale = dims.head_dim ** -0.5
+    if seqpar and s_max % dims.tp:
+        raise ValueError(f"s_max={s_max} must divide tp={dims.tp} for the "
+                         "sequence-parallel paged cache")
+    s_local = s_max // dims.tp if seqpar else s_max
+    if s_local % page_size:
+        raise ValueError(f"page_size={page_size} must divide the per-shard "
+                         f"sequence capacity {s_local}")
+    n_pmax = s_local // page_size
+    if pool_pages is None:
+        pool_pages = batch * n_pmax
+    shape = (pool_pages, page_size, dims.kv_local, dims.head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                        jnp.full((batch, n_pmax), -1, jnp.int32),
+                        jnp.zeros((batch,), jnp.int32))
 
-    if seqpar:
-        # --- write: only the shard owning global position `length[b]` stores
+
+def _check_prompt_fits(S_p: int, S_loc: int, dims: AttnDims) -> None:
+    S_glob = S_loc * (dims.tp if kv_cache_seq_parallel(dims) else 1)
+    if S_p > S_glob:
+        raise ValueError(
+            f"prompt length {S_p} exceeds the KV-cache capacity {S_glob} "
+            "(s_max); raise s_max or bucket the request — refusing to "
+            "silently truncate the prompt")
+
+
+def prefill_kv_cache(pc: ParamCtx, cache, k, v, dims: AttnDims,
+                     prompt_lens=None):
+    """Write a full prompt's K/V (B, S_p, KVl, hd) into a fresh cache.
+
+    Works for both cache layouts (each shard keeps the slice of the prompt
+    that falls in its global-position range) and both storage layouts
+    (contiguous :class:`KVCache` slab or :class:`PagedKVCache` pool).
+    ``prompt_lens``: optional (B,) per-slot true lengths when the prompt
+    batch is right-padded to a bucket; lengths default to S_p for every
+    sequence.  Prompts longer than the cache raise instead of truncating.
+    """
+    if isinstance(cache, PagedKVCache):
+        return _prefill_paged(pc, cache, k, v, dims, prompt_lens)
+    S_loc, S_p = cache.k.shape[1], k.shape[1]
+    _check_prompt_fits(S_p, S_loc, dims)
+    base = (pc.ctx.tp_index() * S_loc) if kv_cache_seq_parallel(dims) else 0
+    plens = (jnp.full((k.shape[0],), S_p, jnp.int32) if prompt_lens is None
+             else prompt_lens.astype(jnp.int32))
+    gpos = base + jnp.arange(S_loc)
+    idx = jnp.clip(gpos, 0, S_p - 1)
+    sel = (gpos[None, :] < plens[:, None])[:, :, None, None]
+    knew = jnp.where(sel, jnp.take(k.astype(cache.k.dtype), idx, axis=1), cache.k)
+    vnew = jnp.where(sel, jnp.take(v.astype(cache.v.dtype), idx, axis=1), cache.v)
+    return KVCache(knew, vnew, plens)
+
+
+def _prefill_paged(pc: ParamCtx, cache: PagedKVCache, k, v, dims: AttnDims,
+                   prompt_lens=None) -> PagedKVCache:
+    B, S_p = k.shape[0], k.shape[1]
+    n_pmax = cache.page_table.shape[1]
+    page = cache.page_size
+    S_loc = n_pmax * page
+    _check_prompt_fits(S_p, S_loc, dims)
+    base = (pc.ctx.tp_index() * S_loc) if kv_cache_seq_parallel(dims) else 0
+    plens = (jnp.full((B,), S_p, jnp.int32) if prompt_lens is None
+             else prompt_lens.astype(jnp.int32))
+    gpos = base + jnp.arange(S_loc)
+    idx = jnp.clip(gpos, 0, S_p - 1)
+    sel = gpos[None, :] < plens[:, None]                      # (B, S_loc)
+    pids = jnp.maximum(cache.page_table, 0)
+    n_pool = cache.k_pages.shape[0]
+    tgt = jnp.where(cache.page_table >= 0, cache.page_table, n_pool)
+
+    def write(pages, src):
+        src_loc = jnp.take(src.astype(pages.dtype), idx, axis=1)
+        src_pg = src_loc.reshape((B, n_pmax, page) + src_loc.shape[2:])
+        content = jnp.where(sel.reshape(B, n_pmax, page)[..., None, None],
+                            src_pg, pages[pids])
+        # unique targets by construction (a page belongs to one slot); the
+        # out-of-range id n_pool drops unallocated pages' writes
+        return pages.at[tgt].set(content, mode="drop")
+
+    return PagedKVCache(write(cache.k_pages, k), write(cache.v_pages, v),
+                        cache.page_table, plens)
+
+
+def _attend_decode(pc: ParamCtx, q, kview, vview, length, dims: AttnDims,
+                   extra_mask=None):
+    """One-token decode attention over a local contiguous K/V view.
+
+    ``kview``/``vview``: (B, S_loc, KVl, hd) — a contiguous slab or the
+    page-gathered reconstruction of one (identical math either way, so the
+    paged path stays bitwise-equal to the contiguous reference).  Positions
+    ``<= length[b]`` are attended; ``extra_mask`` (B, S_loc) further
+    restricts (paged: unallocated pages).  Sequence-parallel layouts merge
+    per-shard partials with a distributed online softmax (pmax + psum).
+    Returns y (B, 1, heads_local, hd).
+    """
+    S_loc = kview.shape[1]
+    scale = dims.head_dim ** -0.5
+    if kv_cache_seq_parallel(dims):
         tp_idx = pc.ctx.tp_index()
-        owner = cache.length // S_loc                               # (B,)
-        local_pos = cache.length - owner * S_loc
-        wmask = ((jnp.arange(S_loc)[None, :] == local_pos[:, None])
-                 & (owner == tp_idx)[:, None])                      # (B,S)
-        knew = jnp.where(wmask[:, :, None, None], k.astype(cache.k.dtype), cache.k)
-        vnew = jnp.where(wmask[:, :, None, None], v.astype(cache.v.dtype), cache.v)
-        # --- partial attention over the local slice ------------------------
         # Every shard needs ALL q heads against its slice: gather q (one
         # token — bytes are negligible next to the cache stream).
-        qg = pc.ctx.all_gather_model(q, axis=2)     # (B, 1, H, hd)
-        ke = _expand_kv(knew.astype(q.dtype), dims)  # kv replicated -> H heads
-        ve = _expand_kv(vnew.astype(q.dtype), dims)
+        qg = pc.ctx.all_gather_model(q, axis=2)      # (B, 1, H, hd)
+        ke = _expand_kv(kview.astype(q.dtype), dims)  # kv replicated -> H heads
+        ve = _expand_kv(vview.astype(q.dtype), dims)
         s = jnp.einsum("bqhd,bkhd->bhqk", qg, ke).astype(jnp.float32) * scale
         gpos = tp_idx * S_loc + jnp.arange(S_loc)
-        gmask = gpos[None, :] <= cache.length[:, None]              # (B,S)
+        gmask = gpos[None, :] <= length[:, None]                    # (B,S)
+        if extra_mask is not None:
+            gmask = jnp.logical_and(gmask, extra_mask)
         s = jnp.where(gmask[:, None, None, :], s, -1e30)
         ax = dims_model_axis(pc)
         m_loc = jnp.max(s, axis=-1)                                # (B,H,1)
@@ -309,19 +400,56 @@ def decode_self_attention(pc: ParamCtx, path: str, p, x, cache: KVCache,
         y = jnp.transpose(y, (0, 2, 1, 3))                          # (B,1,H,hd)
         # back to the local q-head slice for the row-parallel wo
         hl = dims.heads_local
-        y = jax.lax.dynamic_slice_in_dim(y, tp_idx * hl, hl, axis=2)
+        return jax.lax.dynamic_slice_in_dim(y, tp_idx * hl, hl, axis=2)
+    tp_idx = pc.ctx.tp_index()
+    ke = _expand_kv(kview.astype(q.dtype), dims, tp_idx)
+    ve = _expand_kv(vview.astype(q.dtype), dims, tp_idx)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * scale
+    att_mask = (jnp.arange(S_loc)[None, :] <= length[:, None])
+    if extra_mask is not None:
+        att_mask = jnp.logical_and(att_mask, extra_mask)
+    s = jnp.where(att_mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, ve)
+
+
+def decode_self_attention(pc: ParamCtx, path: str, p, x, cache,
+                          dims: AttnDims, *, impl: str = "ref"):
+    """One-token decode: x (B, 1, D); returns (y, new_cache).
+
+    Per-sequence lengths: slot b's new token writes at ``length[b]`` and
+    attends to positions ``<= length[b]`` — sequences admitted at different
+    times (continuous batching) coexist in one step.
+
+    Storage dispatch on the cache type:
+    * :class:`KVCache` — contiguous slab, kv-sharded (B, S_max, KV/tp, hd)
+      or sequence-parallel (B, S_max/tp, KV, hd) with a distributed online
+      softmax merging the per-shard partials.
+    * :class:`PagedKVCache` — shared page pool + per-slot page tables, same
+      position ownership per shard.  ``impl="ref"`` gathers pages into the
+      contiguous view (bitwise-equal to :class:`KVCache`); ``impl="flash"``
+      walks the page table inside the batched flash-decode Pallas kernel
+      (no (B, S) materialization; fp-accumulation order differs).
+    """
+    if isinstance(cache, PagedKVCache):
+        return _decode_paged(pc, path, p, x, cache, dims, impl=impl)
+    seqpar = kv_cache_seq_parallel(dims)
+    pos = cache.length[:, None]                      # (B, 1) per-seq positions
+    q, k, v = _project_qkv(pc, path, p, x, x, dims, pos, pos)
+    S_loc = cache.k.shape[1]
+
+    if seqpar:
+        # write: only the shard owning global position `length[b]` stores
+        tp_idx = pc.ctx.tp_index()
+        owner = cache.length // S_loc                               # (B,)
+        local_pos = cache.length - owner * S_loc
+        wmask = ((jnp.arange(S_loc)[None, :] == local_pos[:, None])
+                 & (owner == tp_idx)[:, None])                      # (B,S)
     else:
-        wmask = (jnp.arange(S_loc)[None, :] == cache.length[:, None])  # (B,S)
-        knew = jnp.where(wmask[:, :, None, None], k.astype(cache.k.dtype), cache.k)
-        vnew = jnp.where(wmask[:, :, None, None], v.astype(cache.v.dtype), cache.v)
-        tp_idx2 = pc.ctx.tp_index()
-        ke = _expand_kv(knew.astype(q.dtype), dims, tp_idx2)
-        ve = _expand_kv(vnew.astype(q.dtype), dims, tp_idx2)
-        s = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * scale
-        att_mask = (jnp.arange(S_loc)[None, :] <= cache.length[:, None])
-        s = jnp.where(att_mask[:, None, None, :], s, -1e30)
-        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-        y = jnp.einsum("bhqk,bkhd->bqhd", w, ve)
+        wmask = (jnp.arange(S_loc)[None, :] == cache.length[:, None])
+    knew = jnp.where(wmask[:, :, None, None], k.astype(cache.k.dtype), cache.k)
+    vnew = jnp.where(wmask[:, :, None, None], v.astype(cache.v.dtype), cache.v)
+    y = _attend_decode(pc, q, knew, vnew, cache.length, dims)
 
     B = x.shape[0]
     y = y.reshape(B, 1, dims.heads_local * dims.head_dim)
@@ -329,5 +457,171 @@ def decode_self_attention(pc: ParamCtx, path: str, p, x, cache: KVCache,
     return out, KVCache(knew, vnew, cache.length + 1)
 
 
+def _paged_write_token(cache: PagedKVCache, k_tok, v_tok, dims: AttnDims,
+                       tp_idx):
+    """Write one token's K/V (B, KVl, hd) at position ``length[b]``.
+
+    The write lands in page ``page_table[b, pos // page]`` at offset
+    ``pos % page``; it is DROPPED (not clipped onto a live page) when the
+    position falls outside this shard's range or the page is unallocated —
+    a slot past its capacity can only lose its own new token, never clobber
+    another slot's pages.
+    """
+    B, n_pmax = cache.page_table.shape
+    page = cache.page_size
+    n_pool = cache.k_pages.shape[0]
+    S_loc = n_pmax * page
+    if kv_cache_seq_parallel(dims):
+        owner = cache.length // S_loc
+        in_range = owner == tp_idx
+        lpos = cache.length - owner * S_loc
+    else:
+        in_range = cache.length < S_loc
+        lpos = cache.length
+    lpos = jnp.where(in_range, lpos, 0)
+    j = lpos // page
+    off = lpos % page
+    pid = jnp.take_along_axis(cache.page_table, j[:, None], axis=1)[:, 0]
+    ok = jnp.logical_and(in_range, pid >= 0)
+    tgt = jnp.where(ok, pid, n_pool)                 # n_pool = dropped
+    k_pages = cache.k_pages.at[tgt, off].set(
+        k_tok.astype(cache.k_pages.dtype), mode="drop")
+    v_pages = cache.v_pages.at[tgt, off].set(
+        v_tok.astype(cache.v_pages.dtype), mode="drop")
+    return k_pages, v_pages
+
+
+def _decode_paged(pc: ParamCtx, path: str, p, x, cache: PagedKVCache,
+                  dims: AttnDims, *, impl: str = "ref"):
+    pos = cache.length[:, None]
+    q, k, v = _project_qkv(pc, path, p, x, x, dims, pos, pos)
+    tp_idx = pc.ctx.tp_index()
+    k_pages, v_pages = _paged_write_token(cache, k[:, 0], v[:, 0], dims, tp_idx)
+    new_cache = PagedKVCache(k_pages, v_pages, cache.page_table,
+                             cache.length + 1)
+    B, n_pmax = cache.page_table.shape
+    page = cache.page_size
+    if impl == "flash":
+        y = _paged_flash_attend(pc, q, new_cache, dims, tp_idx)
+    else:
+        # reference path: gather pages into the contiguous per-shard view and
+        # run the exact slab math (bitwise-equal to the KVCache layout)
+        pids = jnp.maximum(cache.page_table, 0)
+        kview = k_pages[pids].reshape(
+            (B, n_pmax * page) + k_pages.shape[2:])
+        vview = v_pages[pids].reshape(
+            (B, n_pmax * page) + v_pages.shape[2:])
+        alloc = jnp.repeat(cache.page_table >= 0, page, axis=1)  # (B, S_loc)
+        y = _attend_decode(pc, q, kview, vview, cache.length, dims,
+                           extra_mask=alloc)
+    y = y.reshape(B, 1, dims.heads_local * dims.head_dim)
+    out = pc.ctx.psum_model(dense(pc, f"{path}/wo", p["wo"], y))
+    return out, new_cache
+
+
+def _paged_flash_attend(pc: ParamCtx, q, cache: PagedKVCache, dims: AttnDims,
+                        tp_idx):
+    """Batched flash-decode over the page pool (Pallas kernel).
+
+    The kernel walks each slot's page table with an online softmax over the
+    key dimension and returns unnormalized (acc, m, l) partials; the
+    sequence-parallel layout merges them across the model axis exactly like
+    the reference distributed softmax.  Returns y (B, 1, heads_local, hd).
+    """
+    from repro.kernels import ops
+
+    seqpar = kv_cache_seq_parallel(dims)
+    B, n_pmax = cache.page_table.shape
+    S_loc = n_pmax * cache.page_size
+    hd = dims.head_dim
+    if seqpar:
+        qh = pc.ctx.all_gather_model(q, axis=2)[:, 0]        # (B, H, hd)
+        kvh, n_q = dims.kv_local, dims.n_heads
+        base = tp_idx * S_loc
+    else:
+        qh = q[:, 0]                                         # (B, Hl, hd)
+        kvh, n_q = dims.kv_local, dims.heads_local
+        base = 0
+    # group q heads by their kv head (matches _expand_kv's repeat order)
+    qr = qh.reshape(B, kvh, n_q // kvh, hd)
+    # cache.length was already incremented by the write, so it IS the valid
+    # token count (including the just-written token); clip to local coords
+    lloc = jnp.clip(cache.length - base, 0, S_loc)
+    acc, m, l = ops.flash_paged_decode(qr, cache.k_pages, cache.v_pages,
+                                       cache.page_table, lloc)
+    ax = dims_model_axis(pc)
+    if seqpar and ax:
+        m_glob = jax.lax.pmax(m, ax)
+        corr = jnp.exp(m - m_glob)
+        l = jax.lax.psum(l * corr, ax)
+        acc = jax.lax.psum(acc * corr, ax)
+    y = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)        # (B,KVh,G,hd)
+    y = y.reshape(B, 1, n_q, hd)
+    if seqpar:
+        hl = dims.heads_local
+        y = jax.lax.dynamic_slice_in_dim(y, tp_idx * hl, hl, axis=2)
+    return y
+
+
 def dims_model_axis(pc: ParamCtx):
     return pc.ctx.model_axis
+
+
+# ---------------------------------------------------------------------------
+# Slot-granular cache merges (continuous batching / bucketed prefill)
+# ---------------------------------------------------------------------------
+
+
+def merge_slot_caches(old, new, keep):
+    """Per-slot cache merge: ``keep[b]`` selects slot b's state from ``new``.
+
+    Ordinary cache leaves are layer-stacked ``(L, B, ...)`` and merge with a
+    masked where on the slot dim.  :class:`PagedKVCache` pools merge at PAGE
+    granularity through the page table (a slot's pages live scattered in the
+    shared pool, so a slot-dim where cannot apply): kept slots' pages are
+    scattered from ``new`` into ``old``, every other pool row is untouched.
+    """
+    def one(o, n):
+        if isinstance(o, PagedKVCache):
+            return _merge_paged_stacked(o, n, keep)
+        return jnp.where(keep.reshape((1, -1) + (1,) * (o.ndim - 2)), n, o)
+
+    return jax.tree_util.tree_map(
+        one, old, new, is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+
+def _merge_paged_stacked(old: PagedKVCache, new: PagedKVCache, keep):
+    """Layer-stacked (L, ...) paged merge; ``keep`` (B,) is layer-invariant."""
+    def merge_layer(o: PagedKVCache, n: PagedKVCache):
+        n_pool = o.k_pages.shape[0]
+        pids = jnp.maximum(n.page_table, 0)
+        tgt = jnp.where((n.page_table >= 0) & keep[:, None],
+                        n.page_table, n_pool)
+
+        def pool(po, pn):
+            return po.at[tgt].set(pn[pids], mode="drop")
+
+        return PagedKVCache(
+            pool(o.k_pages, n.k_pages), pool(o.v_pages, n.v_pages),
+            jnp.where(keep[:, None], n.page_table, o.page_table),
+            jnp.where(keep, n.length, o.length))
+
+    return jax.vmap(merge_layer)(old, new)
+
+
+def fresh_slot_caches(caches):
+    """Zeroed per-slot state for a prefill pass, KEEPING page tables.
+
+    The prefill needs the live tables to place its pages;
+    :func:`merge_slot_caches` discards the non-admitted slots' (and any
+    untouched) pages afterwards.
+    """
+    def one(c):
+        if isinstance(c, PagedKVCache):
+            return PagedKVCache(jnp.zeros_like(c.k_pages),
+                                jnp.zeros_like(c.v_pages),
+                                c.page_table, jnp.zeros_like(c.length))
+        return jax.tree_util.tree_map(jnp.zeros_like, c)
+
+    return jax.tree_util.tree_map(
+        one, caches, is_leaf=lambda x: isinstance(x, PagedKVCache))

@@ -15,8 +15,8 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.attention import (
     AttnDims, KVCache, cross_attention, cross_attention_cached,
-    decode_self_attention, init_attention, init_kv_cache, project_cross_kv,
-    self_attention,
+    decode_self_attention, init_attention, init_kv_cache,
+    init_paged_kv_cache, project_cross_kv, self_attention,
 )
 from repro.models.common import ParamCtx, init_dense, key_iter
 from repro.models.transformer import attn_dims, padded_vocab_local, _stack
@@ -113,9 +113,16 @@ def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto
 
 
 def init_decoder_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
-                        dtype=jnp.bfloat16):
+                        dtype=jnp.bfloat16, *, page_size=None,
+                        pool_pages=None):
     ad = attn_dims(cfg, tp)
-    one = init_kv_cache(batch, s_max, ad, dtype)
+    if page_size:
+        # only the per-token-growing SELF cache pages; the cross K/V is a
+        # fixed-size memory projection and stays a contiguous slab
+        one = init_paged_kv_cache(batch, s_max, ad, dtype,
+                                  page_size=page_size, pool_pages=pool_pages)
+    else:
+        one = init_kv_cache(batch, s_max, ad, dtype)
     self_caches = jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
     # precomputed cross K/V over the encoder memory (filled at prefill via
@@ -139,29 +146,35 @@ def fill_cross_caches(cfg: ModelConfig, pc, params, memory, caches):
 
 
 def prefill(cfg: ModelConfig, pc: ParamCtx, params, frames, caches,
-            *, attn_impl="auto"):
+            *, attn_impl="auto", prompt_lens=None):
     """Real prefill: run the encoder over the source frames and fill the
     cross-attention K/V caches.  Decoder self caches start empty (decode
     begins from BOS), so ``None`` logits tell the driver to seed with BOS.
 
-    ``frames`` must span the cache's memory length (the driver pads to it).
+    ``frames`` must span the cache's memory length (the driver pads to it);
+    ``prompt_lens`` is accepted for interface uniformity but ignored — the
+    text side has no prompt, so there is nothing to bucket.
     """
+    del prompt_lens
     memory = encode(cfg, pc, params, frames, attn_impl=attn_impl)
     return None, fill_cross_caches(cfg, pc, params, memory, caches)
 
 
-def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
+def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches,
+                *, attn_impl="auto"):
     """One decoder token against cached self-attn KV + cached cross K/V."""
     tp = pc.ctx.tp
     ad = attn_dims(cfg, tp)
     vl = padded_vocab_local(cfg, tp)
     x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
     x = x.astype(pc.compute_dtype)
+    decode_impl = "flash" if attn_impl == "flash" else "ref"
 
     def layer(x, scanned):
         lp, cache, ck, cv = scanned
         h = L.rmsnorm(pc, "dec/ln1", lp["ln1"], x, cfg.norm_eps)
-        a, nc = decode_self_attention(pc, "dec/self", lp["self"], h, cache, ad)
+        a, nc = decode_self_attention(pc, "dec/self", lp["self"], h, cache, ad,
+                                      impl=decode_impl)
         x = x + a
         h = L.rmsnorm(pc, "dec/ln_x", lp["ln_x"], x, cfg.norm_eps)
         x = x + cross_attention_cached(pc, "dec/cross", lp["cross"], h, ck, cv, ad)

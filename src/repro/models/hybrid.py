@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.attention import (
-    KVCache, decode_self_attention, init_attention, init_kv_cache, self_attention,
+    KVCache, decode_self_attention, init_attention, init_kv_cache,
+    init_paged_kv_cache, self_attention,
 )
 from repro.models.common import ParamCtx, init_dense, key_iter
 from repro.models.moe import init_moe, moe_block
@@ -134,37 +135,42 @@ def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto
 
 
 def init_hybrid_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
-                       dtype=jnp.bfloat16):
+                       dtype=jnp.bfloat16, *, page_size=None, pool_pages=None):
     n_periods = cfg.n_layers // cfg.attn_period
     ad = attn_dims(cfg, tp)
     sd = ssm_dims(cfg, tp)
     kinds = _layer_kinds(cfg)
     caches = {}
     for j, (mixer, _ffn) in enumerate(kinds):
-        one = (init_kv_cache(batch, s_max, ad, dtype) if mixer == "attn"
-               else init_ssm_cache(batch, sd, dtype))
+        if mixer == "attn":
+            one = (init_paged_kv_cache(batch, s_max, ad, dtype,
+                                       page_size=page_size,
+                                       pool_pages=pool_pages)
+                   if page_size else init_kv_cache(batch, s_max, ad, dtype))
+        else:
+            one = init_ssm_cache(batch, sd, dtype)
         caches[f"sub{j}"] = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), one)
     return caches
 
 
 def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, caches,
-            *, attn_impl="auto"):
+            *, attn_impl="auto", prompt_lens=None):
     """Hybrid prefill: scan of decode steps over the prompt — the SSM
     sublayers advance their constant-size state and the attention sublayers
-    fill their KV caches (per-sequence lengths end at S_p).
+    fill their KV caches (per-sequence lengths end at each slot's own
+    prompt length under bucketed prompts).
     tokens: (B, S_p).  Returns (last-position local logits, caches)."""
     del attn_impl  # decode path drives both mixer kinds
+    from repro.models.ssm_lm import prefill_by_decode
 
-    def step(caches, t):
-        logits, caches = decode_step(cfg, pc, params, t[:, None], caches)
-        return caches, logits
-
-    caches, logits = jax.lax.scan(step, caches, jnp.moveaxis(tokens, 1, 0))
-    return logits[-1], caches
+    return prefill_by_decode(
+        lambda t, c: decode_step(cfg, pc, params, t, c),
+        tokens, caches, prompt_lens)
 
 
-def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
+def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches,
+                *, attn_impl="auto"):
     tp = pc.ctx.tp
     ad = attn_dims(cfg, tp)
     sd = ssm_dims(cfg, tp)
@@ -173,6 +179,7 @@ def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
     vl = padded_vocab_local(cfg, tp)
     x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
     x = x.astype(pc.compute_dtype)
+    decode_impl = "flash" if attn_impl == "flash" else "ref"
 
     def period(x, scanned):
         pp, pcache = scanned
@@ -182,7 +189,8 @@ def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
             h = L.rmsnorm(pc, f"sub{j}/ln1", sp["ln1"], x, cfg.norm_eps)
             if mixer == "attn":
                 a, nc = decode_self_attention(pc, f"sub{j}/attn", sp["mixer"], h,
-                                              pcache[f"sub{j}"], ad)
+                                              pcache[f"sub{j}"], ad,
+                                              impl=decode_impl)
             else:
                 a, nc = ssm_decode_step(pc, f"sub{j}/ssm", sp["mixer"], h,
                                         pcache[f"sub{j}"], sd)

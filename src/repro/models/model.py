@@ -40,6 +40,9 @@ class Model:
     prefill: Callable = None
     # (b, s_prompt, s_max) -> ShapeDtypeStruct tree for the prefill batch
     prefill_batch_spec: Callable = None
+    # whether init_caches understands page_size/pool_pages (families whose
+    # decode state grows per token; SSM state is O(1) — nothing to page)
+    supports_paged_kv: bool = False
 
 
 def _tokens_spec(b, s):
@@ -62,10 +65,11 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key, tp: transformer.init_lm(cfg, key, tp),
             train_loss=lambda pc, p, b, **kw: transformer.train_loss(cfg, pc, p, b, **kw),
             forward=lambda pc, p, b, **kw: transformer.forward(cfg, pc, p, b["tokens"], **kw),
-            decode_step=lambda pc, p, b, caches: transformer.decode_step(
-                cfg, pc, p, b["token"], caches),
-            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16:
-                transformer.init_caches(cfg, batch, s_max, tp, dtype),
+            decode_step=lambda pc, p, b, caches, **kw: transformer.decode_step(
+                cfg, pc, p, b["token"], caches, **kw),
+            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16, **kw:
+                transformer.init_caches(cfg, batch, s_max, tp, dtype, **kw),
+            supports_paged_kv=True,
             train_batch_spec=lambda b, s: _tokens_spec(b, s),
             decode_batch_spec=lambda b, s: {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
             prefill=lambda pc, p, b, caches, **kw: transformer.prefill(
@@ -79,9 +83,10 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key, tp: ssm_lm.init_ssm_lm(cfg, key, tp),
             train_loss=lambda pc, p, b, **kw: ssm_lm.train_loss(cfg, pc, p, b, **kw),
             forward=lambda pc, p, b, **kw: ssm_lm.forward(cfg, pc, p, b["tokens"], **kw),
-            decode_step=lambda pc, p, b, caches: ssm_lm.decode_step(
+            decode_step=lambda pc, p, b, caches, **kw: ssm_lm.decode_step(
                 cfg, pc, p, b["token"], caches),
-            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16:
+            # constant-state mixer: nothing grows per token, nothing to page
+            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16, **kw:
                 ssm_lm.init_ssm_lm_caches(cfg, batch, tp, dtype),
             train_batch_spec=lambda b, s: _tokens_spec(b, s),
             decode_batch_spec=lambda b, s: {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
@@ -96,10 +101,11 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key, tp: hybrid.init_hybrid(cfg, key, tp),
             train_loss=lambda pc, p, b, **kw: hybrid.train_loss(cfg, pc, p, b, **kw),
             forward=lambda pc, p, b, **kw: hybrid.forward(cfg, pc, p, b["tokens"], **kw),
-            decode_step=lambda pc, p, b, caches: hybrid.decode_step(
-                cfg, pc, p, b["token"], caches),
-            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16:
-                hybrid.init_hybrid_caches(cfg, batch, s_max, tp, dtype),
+            decode_step=lambda pc, p, b, caches, **kw: hybrid.decode_step(
+                cfg, pc, p, b["token"], caches, **kw),
+            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16, **kw:
+                hybrid.init_hybrid_caches(cfg, batch, s_max, tp, dtype, **kw),
+            supports_paged_kv=True,
             train_batch_spec=lambda b, s: _tokens_spec(b, s),
             decode_batch_spec=lambda b, s: {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)},
             prefill=lambda pc, p, b, caches, **kw: hybrid.prefill(
@@ -127,10 +133,11 @@ def build_model(cfg: ModelConfig) -> Model:
             forward=lambda pc, p, b, **kw: encdec.decode_train(
                 cfg, pc, p, encdec.encode(cfg, pc, p, b["frames"], **kw),
                 b["tokens"], **kw),
-            decode_step=lambda pc, p, b, caches: encdec.decode_step(
-                cfg, pc, p, b["token"], caches),
-            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16:
-                encdec.init_decoder_caches(cfg, batch, s_max, tp, dtype),
+            decode_step=lambda pc, p, b, caches, **kw: encdec.decode_step(
+                cfg, pc, p, b["token"], caches, **kw),
+            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16, **kw:
+                encdec.init_decoder_caches(cfg, batch, s_max, tp, dtype, **kw),
+            supports_paged_kv=True,
             train_batch_spec=train_spec,
             decode_batch_spec=decode_spec,
             prefill=lambda pc, p, b, caches, **kw: encdec.prefill(
@@ -160,10 +167,11 @@ def build_model(cfg: ModelConfig) -> Model:
             init=lambda key, tp: vlm.init_vlm(cfg, key, tp),
             train_loss=lambda pc, p, b, **kw: vlm.train_loss(cfg, pc, p, b, **kw),
             forward=lambda pc, p, b, **kw: vlm.forward(cfg, pc, p, b["tokens"], b["images"], **kw),
-            decode_step=lambda pc, p, b, caches: vlm.decode_step(
-                cfg, pc, p, b["token"], caches),
-            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16:
-                vlm.init_vlm_caches(cfg, batch, s_max, tp, dtype),
+            decode_step=lambda pc, p, b, caches, **kw: vlm.decode_step(
+                cfg, pc, p, b["token"], caches, **kw),
+            init_caches=lambda batch, s_max, tp, dtype=jnp.bfloat16, **kw:
+                vlm.init_vlm_caches(cfg, batch, s_max, tp, dtype, **kw),
+            supports_paged_kv=True,
             train_batch_spec=train_spec,
             decode_batch_spec=decode_spec,
             prefill=lambda pc, p, b, caches, **kw: vlm.prefill(

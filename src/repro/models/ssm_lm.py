@@ -70,18 +70,57 @@ def init_ssm_lm_caches(cfg: ModelConfig, batch: int, tp: int, dtype=jnp.bfloat16
 
 
 def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, caches,
-            *, attn_impl="auto"):
+            *, attn_impl="auto", prompt_lens=None):
     """SSM prefill: run the recurrence over the prompt (scan of decode steps
     — the state update IS the prefill for a constant-state mixer).
-    tokens: (B, S_p).  Returns (last-position local logits, caches)."""
+    tokens: (B, S_p).  Returns (last-position local logits, caches).
+
+    ``prompt_lens`` (B,): per-slot true lengths under bucketed (right-padded)
+    prompts — each slot's state stops advancing at its own length, so padding
+    never leaks into the recurrence."""
     del attn_impl  # no attention in this family
+    return prefill_by_decode(
+        lambda t, c: decode_step(cfg, pc, params, t, c),
+        tokens, caches, prompt_lens)
 
-    def step(caches, t):
-        logits, caches = decode_step(cfg, pc, params, t[:, None], caches)
-        return caches, logits
 
-    caches, logits = jax.lax.scan(step, caches, jnp.moveaxis(tokens, 1, 0))
-    return logits[-1], caches
+def prefill_by_decode(step_fn, tokens, caches, prompt_lens=None):
+    """Shared scan-of-decode-steps prefill for recurrent families.
+
+    ``step_fn(token (B,1), caches) -> (logits (B,1,Vl), caches)``.  Without
+    ``prompt_lens`` this is a plain scan; with it, every cache leaf advances
+    per-slot only while the step index is inside that slot's prompt
+    (:func:`repro.models.attention.merge_slot_caches` — page-granular for
+    paged KV pools), and the returned logits are each slot's own
+    last-position logits.
+    """
+    from repro.models.attention import merge_slot_caches
+
+    if prompt_lens is None:
+        def step(caches, t):
+            logits, caches = step_fn(t[:, None], caches)
+            return caches, logits
+
+        caches, logits = jax.lax.scan(step, caches, jnp.moveaxis(tokens, 1, 0))
+        return logits[-1], caches
+
+    plens = prompt_lens.astype(jnp.int32)
+
+    def step(carry, it):
+        caches, last = carry
+        i, t = it
+        logits, new = step_fn(t[:, None], caches)
+        caches = merge_slot_caches(caches, new, i < plens)
+        last = jnp.where((i == plens - 1)[:, None, None], logits, last)
+        return (caches, last), ()
+
+    S_p = tokens.shape[1]
+    probe = jax.eval_shape(step_fn, tokens[:, :1], caches)[0]
+    last0 = jnp.zeros(probe.shape, probe.dtype)
+    (caches, last), _ = jax.lax.scan(
+        step, (caches, last0),
+        (jnp.arange(S_p), jnp.moveaxis(tokens, 1, 0)))
+    return last, caches
 
 
 def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):

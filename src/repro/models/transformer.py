@@ -27,6 +27,7 @@ from repro.models.attention import (
     decode_self_attention,
     init_attention,
     init_kv_cache,
+    init_paged_kv_cache,
     prefill_kv_cache,
     self_attention,
 )
@@ -132,22 +133,46 @@ def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto
 # ---------------------------------------------------------------------------
 
 
-def init_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int, dtype=jnp.bfloat16):
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
+                dtype=jnp.bfloat16, *, page_size=None, pool_pages=None):
+    """Layer-stacked decode caches; ``page_size`` selects the paged layout
+    (shared page pool + per-slot page tables) over the contiguous slab."""
     ad = attn_dims(cfg, tp)
-    one = init_kv_cache(batch, s_max, ad, dtype)
+    if page_size:
+        one = init_paged_kv_cache(batch, s_max, ad, dtype,
+                                  page_size=page_size, pool_pages=pool_pages)
+    else:
+        one = init_kv_cache(batch, s_max, ad, dtype)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
 
 
+def last_position_logits(pc: ParamCtx, params, x, prompt_lens=None):
+    """Logits at each slot's true last prompt position.
+
+    Bucketed prefill right-pads prompts, so "last position" is per-slot
+    (``prompt_lens - 1``), not ``S_p - 1``; causality guarantees the true
+    last position never attended the padding after it.
+    """
+    if prompt_lens is None:
+        x_last = x[:, -1:, :]
+    else:
+        idx = (prompt_lens.astype(jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, jnp.clip(idx, 0, x.shape[1] - 1),
+                                     axis=1)
+    return L.vocab_logits(pc, "unembed", params["unembed"]["w"], x_last)
+
+
 def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, caches,
-            *, attn_impl="auto"):
+            *, attn_impl="auto", prompt_lens=None):
     """Parallel prefill: one forward pass over the prompt that also writes
     every layer's self-attention K/V into ``caches`` and stamps per-sequence
     lengths — the step continuous batching runs at admission time.
 
     tokens: (B, S_p) with S_p <= s_max.  Returns (last-position local logits
     (B, 1, V/tp), filled caches).  ``attn_impl="flash"`` runs the prompt
-    through the Pallas flash-attention kernel.
+    through the Pallas flash-attention kernel.  ``prompt_lens`` (B,) gives
+    per-slot true lengths when prompts are right-padded to a bucket size.
     """
     tp = pc.ctx.tp
     ad = attn_dims(cfg, tp)
@@ -167,29 +192,35 @@ def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, caches,
             m, _ = moe_block(pc, "blocks/moe", lp["moe"], h, md)
         else:
             m = L.mlp(pc, "blocks/mlp", lp["mlp"], h, cfg.mlp_act)
-        return x + m, prefill_kv_cache(pc, cache, k, v, ad)
+        return x + m, prefill_kv_cache(pc, cache, k, v, ad, prompt_lens)
 
     x, new_caches = jax.lax.scan(block, x, (params["blocks"], caches))
     x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
-    logits = L.vocab_logits(pc, "unembed", params["unembed"]["w"], x[:, -1:, :])
+    logits = last_position_logits(pc, params, x, prompt_lens)
     return logits, new_caches
 
 
 def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches,
                 *, attn_impl="auto"):
-    """token: (B, 1) int32 -> (local_logits (B,1,V/tp), new caches)."""
+    """token: (B, 1) int32 -> (local_logits (B,1,V/tp), new caches).
+
+    ``attn_impl="flash"`` routes paged caches through the batched
+    flash-decode Pallas kernel; any other value takes the (bitwise
+    slab-equivalent) gather reference path.
+    """
     tp = pc.ctx.tp
     ad = attn_dims(cfg, tp)
     md = moe_dims(cfg, tp) if cfg.family == "moe" else None
     vl = padded_vocab_local(cfg, tp)
     x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
     x = x.astype(pc.compute_dtype)
+    decode_impl = "flash" if attn_impl == "flash" else "ref"
 
     def block(x, scanned):
         lp, cache = scanned
         h = L.rmsnorm(pc, "blocks/ln1", lp["ln1"], x, cfg.norm_eps)
         a, new_cache = decode_self_attention(pc, "blocks/attn", lp["attn"], h,
-                                             cache, ad)
+                                             cache, ad, impl=decode_impl)
         x = x + a
         h = L.rmsnorm(pc, "blocks/ln2", lp["ln2"], x, cfg.norm_eps)
         if cfg.family == "moe":

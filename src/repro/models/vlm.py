@@ -16,11 +16,12 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.attention import (
     KVCache, cross_attention, cross_attention_cached, decode_self_attention,
-    init_attention, init_kv_cache, prefill_kv_cache, project_cross_kv,
-    self_attention,
+    init_attention, init_kv_cache, init_paged_kv_cache, prefill_kv_cache,
+    project_cross_kv, self_attention,
 )
 from repro.models.common import ParamCtx, init_dense, key_iter
-from repro.models.transformer import attn_dims, padded_vocab_local, _stack
+from repro.models.transformer import (attn_dims, last_position_logits,
+                                      padded_vocab_local, _stack)
 
 
 def init_vlm(cfg: ModelConfig, key, tp: int, dtype=jnp.float32) -> dict:
@@ -111,13 +112,15 @@ def train_loss(cfg: ModelConfig, pc: ParamCtx, params, batch, *, attn_impl="auto
 
 
 def init_vlm_caches(cfg: ModelConfig, batch: int, s_max: int, tp: int,
-                    dtype=jnp.bfloat16):
+                    dtype=jnp.bfloat16, *, page_size=None, pool_pages=None):
     period = cfg.cross_attn_period
     n_periods = cfg.n_layers // period
     ad = attn_dims(cfg, tp)
     caches = {}
     for j in range(period - 1):
-        one = init_kv_cache(batch, s_max, ad, dtype)
+        one = (init_paged_kv_cache(batch, s_max, ad, dtype,
+                                   page_size=page_size, pool_pages=pool_pages)
+               if page_size else init_kv_cache(batch, s_max, ad, dtype))
         caches[f"self{j}"] = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), one)
     # precomputed cross-attention K/V over the image memory (filled by
@@ -144,10 +147,11 @@ def fill_cross_caches(cfg: ModelConfig, pc, params, images, caches):
 
 
 def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, images, caches,
-            *, attn_impl="auto"):
+            *, attn_impl="auto", prompt_lens=None):
     """Real prefill: project the image memory, fill the per-period cross K/V
     caches, AND run the prompt through the self-attention layers, writing
-    their K/V and per-sequence lengths.  Returns (last logits, caches).
+    their K/V and per-sequence lengths (``prompt_lens`` under bucketed,
+    right-padded prompts).  Returns (last logits, caches).
 
     Mirrors ``decode_step``'s period body (the serving convention: no
     sp_gather — the prefill ParamCtx runs with ``sp=False``, correct at any
@@ -178,7 +182,7 @@ def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, images, caches,
             a, (k, v) = self_attention(pc, f"self{j}/attn", sp["attn"], h, ad,
                                        impl=attn_impl)
             new_caches[f"self{j}"] = prefill_kv_cache(pc, pcache[f"self{j}"],
-                                                      k, v, ad)
+                                                      k, v, ad, prompt_lens)
             x = x + a
             h = L.rmsnorm(pc, f"self{j}/ln2", sp["ln2"], x, cfg.norm_eps)
             x = x + L.mlp(pc, f"self{j}/mlp", sp["mlp"], h, cfg.mlp_act)
@@ -186,17 +190,19 @@ def prefill(cfg: ModelConfig, pc: ParamCtx, params, tokens, images, caches,
 
     x, new_caches = jax.lax.scan(period, x, (params["periods"], caches))
     x = L.rmsnorm(pc, "final_norm", params["final_norm"], x, cfg.norm_eps)
-    logits = L.vocab_logits(pc, "unembed", params["unembed"]["w"], x[:, -1:, :])
+    logits = last_position_logits(pc, params, x, prompt_lens)
     return logits, new_caches
 
 
-def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
+def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches,
+                *, attn_impl="auto"):
     # One token; cross-attention uses the precomputed K/V caches.
     tp = pc.ctx.tp
     ad = attn_dims(cfg, tp)
     vl = padded_vocab_local(cfg, tp)
     x = L.vocab_embed(pc, "embed", params["embed"]["table"], token, vl)
     x = x.astype(pc.compute_dtype)
+    decode_impl = "flash" if attn_impl == "flash" else "ref"
 
     def period(x, scanned):
         pp, pcache = scanned
@@ -213,7 +219,8 @@ def decode_step(cfg: ModelConfig, pc: ParamCtx, params, token, caches):
             sp = pp[f"self{j}"]
             h = L.rmsnorm(pc, f"self{j}/ln1", sp["ln1"], x, cfg.norm_eps)
             a, nc = decode_self_attention(pc, f"self{j}/attn", sp["attn"], h,
-                                          pcache[f"self{j}"], ad)
+                                          pcache[f"self{j}"], ad,
+                                          impl=decode_impl)
             new_caches[f"self{j}"] = nc
             x = x + a
             h = L.rmsnorm(pc, f"self{j}/ln2", sp["ln2"], x, cfg.norm_eps)

@@ -15,15 +15,16 @@ process produced it.
 
 Named presets (:func:`get_preset`) cover the ROADMAP grids:
 
-* ``roofline-all-archs``       — all 10 archs x train_4k dryrun on the 16x16
-  pod, plus one 2x16x16 multi-pod cell.
+* ``roofline-all-archs``       — all 10 archs x {train_4k, prefill_32k,
+  decode_32k} dryrun on the 16x16 pod, long_500k rows for the
+  sub-quadratic archs, plus one 2x16x16 multi-pod cell.
 * ``serve-precision-ablation`` — serve smokes over weight bits x kv-cache
-  storage.
+  storage x KV layout (paged vs contiguous).
 * ``fl-codesign-grid``         — the paper's Fig. 2 scheme grid (fl-sim).
 * ``grad-comm-wire``           — train smokes over gradient wire bits
   (consumes :func:`repro.dist.wire.grad_wire_report`).
-* ``ci-tiny``                  — 2 dryrun cells + 1 fl-sim cell; the CI
-  smoke grid.
+* ``ci-tiny``                  — 2 dryrun cells + 1 fl-sim cell + 1
+  long-context paged serve cell; the CI smoke grid.
 """
 
 from __future__ import annotations
@@ -142,34 +143,55 @@ class Sweep:
 # ---------------------------------------------------------------------------
 
 
-def preset_roofline_all_archs(shape: str = "train_4k") -> Sweep:
-    """All 10 archs x ``shape`` dryrun on 16x16, + one 2x16x16 cell."""
-    from repro.configs import ARCH_NAMES
+def preset_roofline_all_archs(
+        shapes: tuple = ("train_4k", "prefill_32k", "decode_32k")) -> Sweep:
+    """All 10 archs x shape rows (train / prefill / decode) on 16x16, plus a
+    ``long_500k`` row per sub-quadratic arch and one 2x16x16 multi-pod cell.
+
+    The train_4k cells keep their original content hashes (the shape axis
+    writes the same ``options.shape`` the old single-shape preset did), so a
+    pre-existing store resumes instead of recompiling them.
+    """
+    from repro.configs import ARCH_NAMES, get_config
 
     dry = {"workload": "dryrun", "mesh": "16x16", "smoke": False,
-           "options": {"shape": shape}}
+           "options": {"shape": shapes[0]}}
+    long_cells = tuple(
+        {"arch": a, **dry, "options": {"shape": "long_500k"}}
+        for a in ARCH_NAMES if get_config(a).supports_long_context)
     return Sweep(
         name="roofline-all-archs",
         base={"arch": "", **dry},
-        axes=(Axis("arch", ARCH_NAMES),),
-        extra_cells=({"arch": "mamba2-780m", **dry, "mesh": "2x16x16"},))
+        axes=(Axis("arch", ARCH_NAMES), Axis("options.shape", shapes)),
+        extra_cells=long_cells + (
+            {"arch": "mamba2-780m", **dry, "mesh": "2x16x16"},))
 
 
 def preset_serve_precision_ablation(steps: int = 12,
                                     arch: str = "yi-6b",
                                     weights: tuple = (32, 7, 12),
-                                    kv_cache: tuple = (32, 16)) -> Sweep:
-    """Serving-policy ablation: weight bits x kv-cache storage (smoke arch)."""
+                                    kv_cache: tuple = (32, 16),
+                                    kv_layout: tuple = ("paged",
+                                                        "contiguous"),
+                                    s_max: int = 64) -> Sweep:
+    """Serving-policy ablation: weight bits x kv-cache storage x KV layout.
+
+    The kv_layout axis is the paged-vs-contiguous comparison on a
+    mixed-length workload (``vary_prompt`` draws ragged prompts): same
+    tokens, same weights — only the KV residency changes.
+    """
     w_axis = tuple({"weights": 32, "lazy": False} if b >= 32
                    else {"weights": b, "lazy": True} for b in weights)
     return Sweep(
         name="serve-precision-ablation",
         base={"arch": arch, "workload": "serve", "smoke": True, "batch": 2,
-              "seq": 32, "precision": {"weights": 32},
+              "seq": s_max, "precision": {"weights": 32},
               "options": {"steps": steps, "prompt_len": 8,
-                          "attn_impl": "ref", "quiet": True}},
+                          "attn_impl": "ref", "vary_prompt": True,
+                          "quiet": True}},
         axes=(Axis("precision", w_axis),
-              Axis("precision.kv_cache", kv_cache)))
+              Axis("precision.kv_cache", kv_cache),
+              Axis("options.kv_layout", kv_layout)))
 
 
 def preset_fl_codesign_grid(rounds: int = 60, n_clients: int = 8,
@@ -215,7 +237,17 @@ def preset_ci_tiny() -> Sweep:
         axes=(Axis("arch", ("mamba2-780m", "yi-6b")),),
         extra_cells=(
             {"arch": "resnet", "workload": "fl-sim", "rounds": 2, "batch": 8,
-             "options": {"scheme": "fwq", "n_clients": 4, "lr": 0.1}},))
+             "options": {"scheme": "fwq", "n_clients": 4, "lr": 0.1}},
+            # long-context serve smoke on the PAGED path: a 5-page pool
+            # against 3-page requests forces deferred admissions and page
+            # reclaim, and ragged prompts exercise the prefill buckets
+            {"arch": "yi-6b", "workload": "serve", "smoke": True, "batch": 2,
+             "seq": 128,
+             "precision": {"weights": 7, "lazy": True},
+             "options": {"steps": 48, "s_max": 128, "prompt_len": 8,
+                         "max_new": 10, "requests": 4, "kv_layout": "paged",
+                         "page_size": 8, "pool_pages": 5,
+                         "vary_prompt": True, "quiet": True}},))
 
 
 PRESETS = {

@@ -53,10 +53,19 @@ def roofline_row(rec: dict) -> dict:
 def serving_row(rec: dict) -> dict:
     s, m = rec["spec"], rec["metrics"]
     p = s["precision"]
+    layout = m.get("kv_layout", "contiguous")
+    if layout == "paged":
+        layout = f"paged/{m.get('page_size', '?')}"
+    kv_bytes = m.get("kv_bytes")
+    kv_contig = m.get("kv_bytes_contiguous") or 0
     return {
         "arch": s["arch"],
         "weights": "f32" if p["weights"] >= 32 else f"{p['weights']}b packed",
         "kv cache": "bf16" if p["kv_cache"] == 16 else "f32",
+        "kv layout": layout,
+        "kv KB": "-" if kv_bytes is None else f"{kv_bytes / 1e3:,.1f}",
+        "kv vs contig": ("-" if not kv_bytes or not kv_contig
+                         else f"{kv_bytes / kv_contig:.2f}"),
         "bytes/step": f"{m['bytes_per_step_packed']:,}",
         "vs f32": _f(m.get("packed_vs_f32"), "{:.3f}"),
         "tokens": str(m.get("decoded_tokens", "-")),

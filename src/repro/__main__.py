@@ -7,6 +7,7 @@ Usage::
     python -m repro dryrun --arch mamba2-780m --shape train_4k
     python -m repro fl     --model mobilenet --rounds 10
     python -m repro sweep  run roofline-all-archs
+    python -m repro analyze --preset ci-tiny --fail-on error
 
 Each subcommand is a thin CLI over :class:`repro.api.Session` (``sweep``
 drives grids of them through :mod:`repro.sweep`); the installed console
@@ -24,6 +25,7 @@ _COMMANDS = {
     "dryrun": "repro.launch.dryrun",
     "fl": "repro.launch.fl",
     "sweep": "repro.sweep.cli",
+    "analyze": "repro.analyze.cli",
 }
 
 

@@ -1,0 +1,37 @@
+"""Static precision / wire / kernel lint over jaxprs and lowered HLO.
+
+Three rule families, none of which execute any compiled code:
+
+* ``precision.*`` (:mod:`repro.analyze.precision_flow`) — walks traced
+  jaxprs tracking which ``dot_general`` ops consume QTensor codes that were
+  eagerly dequantized instead of riding the ``quant_matmul`` /
+  ``expert_dispatch`` fast path, and flags integer ``psum`` accumulators
+  narrower than ``n * (2^bits - 1)`` requires.
+* ``wire.*`` (:mod:`repro.analyze.wire_lint`) — reads the per-collective
+  records :func:`repro.roofline.hlo_parse.parse_module` extracts from the
+  partitioned HLO and flags f32 all-reduces under a low-bit
+  ``PrecisionPolicy.comm``, mis-sized integer wire dtypes, all-gathers the
+  sharding rule table doesn't predict, and drift against
+  ``Session.comm_report()``.
+* ``kernel.*`` (:mod:`repro.analyze.kernel_check`) — enumerates every
+  Pallas BlockSpec index map over its grid from the
+  :class:`repro.kernels.spec.KernelSpec` metadata the kernels export:
+  coverage, out-of-bounds DMA, scratch shape/dtype consistency.
+
+Front doors: ``Session.analyze()``, the ``repro-analyze`` CLI
+(``python -m repro analyze``), and the ``analyze.toml`` allowlist for the
+known-legitimate eager fallbacks.
+"""
+
+from repro.analyze.allowlist import apply_allowlist, load_allowlist
+from repro.analyze.findings import Finding, source_key, worst_severity
+from repro.analyze.kernel_check import check_kernel_spec, shipped_kernel_specs
+from repro.analyze.precision_flow import lint_jaxpr
+from repro.analyze.runner import analyze_session
+from repro.analyze.wire_lint import WireContext, check_comm_report, lint_module
+
+__all__ = [
+    "Finding", "WireContext", "analyze_session", "apply_allowlist",
+    "check_comm_report", "check_kernel_spec", "lint_jaxpr", "lint_module",
+    "load_allowlist", "shipped_kernel_specs", "source_key", "worst_severity",
+]

@@ -1,0 +1,117 @@
+"""``repro-analyze`` / ``python -m repro analyze`` — the static-lint gate.
+
+Usage::
+
+    repro-analyze                                  # ci-tiny grid, analyze.toml
+    repro-analyze --preset ci-tiny --fail-on error # the CI gate
+    repro-analyze --arch yi-6b --workload serve --precision lazy_int8
+    repro-analyze --no-compile --json              # jaxpr+kernel rules only
+
+Runs :func:`repro.analyze.runner.analyze_session` over every cell of a
+named sweep preset (default ``ci-tiny`` — the same grid CI executes), or
+over one ad-hoc RunSpec built from ``--arch``/``--workload`` flags.
+Findings matching ``analyze.toml`` stay visible but don't gate; the exit
+code is non-zero iff any unallowlisted finding reaches ``--fail-on``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _force_device_count(n: int) -> None:
+    from repro.sweep.runner import _drop_device_count_flag
+
+    flags = _drop_device_count_flag(os.environ.get("XLA_FLAGS", ""))
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}").strip()
+
+
+def _cells(args) -> list:
+    if args.arch:
+        from repro.api.spec import RunSpec
+
+        precision = {}
+        if args.precision == "lazy_int8":
+            precision = {"weights": 7, "lazy": True}
+        elif args.precision:
+            precision = json.loads(args.precision)
+        d = {"arch": args.arch, "workload": args.workload,
+             "mesh": args.mesh, "smoke": True, "batch": args.batch,
+             "seq": args.seq}
+        if precision:
+            d["precision"] = precision
+        return [RunSpec.from_dict(d)]
+    from repro.sweep.grid import get_preset
+
+    return [c.spec for c in get_preset(args.preset).cells()]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro-analyze", description=__doc__)
+    ap.add_argument("--preset", default="ci-tiny",
+                    help="sweep preset naming the spec matrix to analyze")
+    ap.add_argument("--arch", default="",
+                    help="analyze one ad-hoc RunSpec instead of a preset")
+    ap.add_argument("--workload", default="serve")
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--precision", default="lazy_int8",
+                    help="'lazy_int8' or a PrecisionPolicy JSON dict")
+    ap.add_argument("--fail-on", choices=("error", "warn", "never"),
+                    default="error",
+                    help="exit non-zero when an unallowlisted finding at or "
+                         "above this severity exists")
+    ap.add_argument("--allowlist", default="analyze.toml",
+                    help="per-rule allowlist file ('' disables)")
+    ap.add_argument("--no-compile", action="store_true",
+                    help="skip the HLO wire lint (no XLA compiles)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON list")
+    args = ap.parse_args(argv)
+
+    specs = _cells(args)
+
+    # one process analyzes every cell: pin the fake-device flag to the
+    # largest mesh before jax initializes its backend
+    from repro.sweep.runner import _mesh_devices
+
+    _force_device_count(max([_mesh_devices(s.mesh) for s in specs] + [1]))
+
+    from repro.analyze.findings import at_or_above
+    from repro.api.session import Session
+
+    allowlist = args.allowlist or None
+    findings = []
+    for spec in specs:
+        label = f"{spec.arch}:{spec.workload}"
+        if not args.json:
+            print(f"== analyzing {label} (mesh {spec.mesh}) ==",
+                  flush=True)
+        findings.extend(Session(spec).analyze(
+            compile=not args.no_compile, allowlist=allowlist))
+
+    if args.json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        n_err = sum(1 for f in findings
+                    if f.severity == "error" and not f.allowed)
+        n_warn = sum(1 for f in findings
+                     if f.severity == "warn" and not f.allowed)
+        n_allowed = sum(1 for f in findings if f.allowed)
+        print(f"-- {len(findings)} findings: {n_err} errors, {n_warn} "
+              f"warnings, {n_allowed} allowlisted --")
+
+    if args.fail_on != "never" and at_or_above(findings, args.fail_on):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,173 @@
+"""Pallas kernel checker: enumerate BlockSpec index maps, statically.
+
+For every :class:`repro.kernels.spec.KernelSpec` the kernels export, walk
+the full grid and evaluate each operand's index map:
+
+* ``kernel.oob_dma``       — ``index * block + block`` exceeds the padded
+  operand shape (the DMA would read/write out of bounds);
+* ``kernel.index_rank``    — the map returns the wrong number of indices;
+* ``kernel.block_misaligned`` — a full-coverage operand whose block does
+  not tile its padded shape (the last tile would overrun);
+* ``kernel.coverage_gap``  — grid enumeration never visits some tile of a
+  full-coverage operand (e.g. an index map that skips the last k step:
+  part of the weight is silently never read / part of the output never
+  written);
+* ``kernel.scratch_shape`` / ``kernel.scratch_dtype`` — a VMEM scratch
+  bound to an operand must match that operand's block (leading 1-dims
+  squeezed) and accumulate in float32.
+
+At most one finding is reported per (kernel, operand): an OOB usually
+implies a coverage gap too, and the acceptance contract is one finding
+per seeded defect.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+from repro.analyze.findings import Finding
+
+_MAX_GRID_POINTS = 1_000_000
+
+
+def _as_int(x):
+    return int(x)
+
+
+def _check_operand(spec, op, cell) -> Finding | None:
+    ranges = [range(int(g)) for g in spec.grid]
+    n_points = 1
+    for r in ranges:
+        n_points *= len(r)
+    if n_points > _MAX_GRID_POINTS:
+        return Finding(
+            rule="kernel.grid_too_large", severity="info",
+            message=f"grid {spec.grid} has {n_points} points; enumeration "
+                    "skipped", key=f"{spec.name}:{op.name}",
+            where=spec.source, cell=cell)
+    seen = set()
+    for g in itertools.product(*ranges):
+        idx = op.index_map(*g)
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        if len(idx) != len(op.block):
+            return Finding(
+                rule="kernel.index_rank", severity="error",
+                message=f"index map returned {len(idx)} indices for a "
+                        f"rank-{len(op.block)} block at grid point {g}",
+                key=f"{spec.name}:{op.name}", where=spec.source, cell=cell)
+        ints = tuple(_as_int(i) for i in idx)
+        for d, (bi, b, s) in enumerate(zip(ints, op.block, op.shape)):
+            off = bi * b
+            if off < 0 or off + b > s:
+                return Finding(
+                    rule="kernel.oob_dma", severity="error",
+                    message=(f"grid point {g} maps dim {d} to block "
+                             f"[{off}:{off + b}) of an extent-{s} operand: "
+                             "out-of-bounds DMA"),
+                    key=f"{spec.name}:{op.name}", where=spec.source,
+                    cell=cell)
+        seen.add(ints)
+    if op.coverage != "full":
+        return None
+    for d, (b, s) in enumerate(zip(op.block, op.shape)):
+        if s % b:
+            return Finding(
+                rule="kernel.block_misaligned", severity="error",
+                message=f"block extent {b} does not tile operand extent "
+                        f"{s} on dim {d} (operand must be padded to a "
+                        "block multiple)",
+                key=f"{spec.name}:{op.name}", where=spec.source, cell=cell)
+    tiles = [range(s // b) for b, s in zip(op.block, op.shape)]
+    n_tiles = 1
+    for t in tiles:
+        n_tiles *= len(t)
+    if n_tiles <= _MAX_GRID_POINTS and len(seen) < n_tiles:
+        missing = next(t for t in itertools.product(*tiles) if t not in seen)
+        return Finding(
+            rule="kernel.coverage_gap", severity="error",
+            message=(f"{n_tiles - len(seen)} of {n_tiles} tiles never "
+                     f"visited (first missing: block index {missing}) — "
+                     "part of the operand is silently skipped"),
+            key=f"{spec.name}:{op.name}", where=spec.source, cell=cell)
+    return None
+
+
+def _check_scratch(spec, sc, cell) -> Finding | None:
+    if sc.dtype != "float32":
+        return Finding(
+            rule="kernel.scratch_dtype", severity="error",
+            message=f"scratch {sc.name} accumulates in {sc.dtype}; partial "
+                    "products must accumulate in float32",
+            key=f"{spec.name}:{sc.name}", where=spec.source, cell=cell)
+    if sc.binds:
+        bound = next((o for o in spec.operands if o.name == sc.binds), None)
+        if bound is None:
+            return Finding(
+                rule="kernel.scratch_shape", severity="error",
+                message=f"scratch {sc.name} binds unknown operand "
+                        f"{sc.binds!r}",
+                key=f"{spec.name}:{sc.name}", where=spec.source, cell=cell)
+        want = tuple(b for b in bound.block if b != 1) or (1,)
+        have = tuple(s for s in sc.shape if s != 1) or (1,)
+        if want != have:
+            return Finding(
+                rule="kernel.scratch_shape", severity="error",
+                message=(f"scratch {sc.name} shape {tuple(sc.shape)} does "
+                         f"not match operand {sc.binds!r} block "
+                         f"{tuple(bound.block)}"),
+                key=f"{spec.name}:{sc.name}", where=spec.source, cell=cell)
+    return None
+
+
+def check_kernel_spec(spec, cell: str = "") -> list[Finding]:
+    """All kernel rules over one spec; at most one finding per operand."""
+    findings = []
+    for op in spec.operands:
+        f = _check_operand(spec, op, cell)
+        if f is not None:
+            findings.append(f)
+    for sc in spec.scratch:
+        f = _check_scratch(spec, sc, cell)
+        if f is not None:
+            findings.append(f)
+    return findings
+
+
+def shipped_kernel_specs(*, d_model: int = 512, d_ff: int = 2048,
+                         heads: int = 8, head_dim: int = 64,
+                         batch: int = 4, seq: int = 160, page: int = 8,
+                         n_pool: int = 6, n_pmax: int = 4) -> list:
+    """The shipped kernels' specs at representative (ragged) serving dims.
+
+    ``seq=160`` is deliberately not a block multiple and ``d_model`` feeds
+    a ragged decode M — the wrappers' padding rules are part of what the
+    checker verifies.
+    """
+    import numpy as np
+
+    from repro.kernels.flash_attention import attention_spec, decode_spec
+    from repro.kernels.quant_matmul import kernel_spec as qm_spec
+
+    # decode-sized x (a handful of rows) and a ragged K: the wrapper pads
+    specs = [
+        qm_spec(batch, d_model, d_ff),
+        qm_spec(3, d_model + 1, d_ff),           # ragged M and K
+        attention_spec(batch * heads, seq, head_dim),
+    ]
+    # page table: slots own 0..n_pmax pages, -1 beyond their length;
+    # pool rows assigned round-robin like the pager does
+    pt = -np.ones((batch, n_pmax), dtype=np.int32)
+    nxt = 0
+    lengths = []
+    for b in range(batch):
+        n_pages = (b % n_pmax) + 1
+        for j in range(n_pages):
+            pt[b, j] = nxt % n_pool
+            nxt += 1
+        lengths.append(n_pages * page - 3)
+    g = 8                                         # G padded to sublane min
+    specs.append(decode_spec(batch, max(heads // 4, 1), g, head_dim,
+                             page=page, n_pool=n_pool, page_table=pt,
+                             lengths=np.asarray(lengths, np.int32)))
+    return specs

@@ -1,0 +1,146 @@
+"""Orchestrate the three rule families over one Session (no execution).
+
+:func:`analyze_session` is what ``Session.analyze()`` and the
+``repro-analyze`` CLI call: it decides which step graphs a RunSpec implies
+(train -> its train step; serve -> the packed decode step plus a prefill;
+dryrun -> its shape cell), traces each via ``Session.trace()`` for the
+precision-flow lint, optionally compiles for the wire lint +
+``comm_report`` cross-check, and runs the kernel checker over the shipped
+:class:`~repro.kernels.spec.KernelSpec` metadata at this config's
+dimensions.  ``fl-sim`` cells have no jaxpr to lint (the CNN simulation is
+not a model-zoo graph) and are skipped with an info finding.
+"""
+
+from __future__ import annotations
+
+from repro.analyze.allowlist import apply_allowlist, load_allowlist
+from repro.analyze.findings import Finding
+
+DEFAULT_ALLOWLIST = "analyze.toml"
+
+
+def _pow2_at_least(n: int, lo: int = 8) -> int:
+    v = lo
+    while v < n:
+        v *= 2
+    return v
+
+
+def lint_cells(session) -> list[tuple[str, object]]:
+    """(label, shape-arg for ``Session.trace``) per step graph to lint."""
+    from repro.configs.base import ShapeSpec
+
+    spec = session.spec
+    wl = spec.workload
+    if wl == "dryrun":
+        name = spec.opt("shape")
+        return [(f"dryrun:{name}", name)]
+    if wl in ("train", "fl-orchestrate"):
+        from repro.launch.mesh import batch_size
+
+        n_clients = max(batch_size(session.mesh, session.axes), 1)
+        cell = ShapeSpec("train_step", seq_len=spec.seq,
+                         global_batch=n_clients * spec.batch, kind="train")
+        return [(f"{wl}:train_step", cell)]
+    if wl == "serve":
+        s_max = int(spec.opt("s_max", spec.seq))
+        bucket = _pow2_at_least(int(spec.opt("prompt_len", 8)))
+        return [
+            ("serve:decode",
+             ShapeSpec("serve_decode", seq_len=s_max,
+                       global_batch=spec.batch, kind="decode")),
+            ("serve:prefill",
+             ShapeSpec("serve_prefill", seq_len=bucket,
+                       global_batch=spec.batch, kind="prefill")),
+        ]
+    return []                                     # fl-sim
+
+
+def _wire_context(session, kind: str):
+    from repro.analyze.wire_lint import WireContext, expected_gathers
+    from repro.launch.mesh import batch_size, fsdp_size, tp_size
+    from repro.launch.steps import serving_axes
+
+    axes = session.axes
+    if kind == "decode":
+        axes = serving_axes(axes, session.spec.batch, session.mesh)
+    policy = session.policy
+    fsdp = fsdp_size(session.mesh, axes)
+    tp = tp_size(session.mesh, axes)
+    return WireContext(
+        policy=policy, kind=kind,
+        n_clients=max(batch_size(session.mesh, session.axes), 1),
+        fsdp=fsdp, tp=tp,
+        expected_gather_dtypes=expected_gathers(
+            fsdp=fsdp, tp=tp,
+            packed=policy.packed and kind != "train",
+            gather_bf16=(getattr(session.cfg, "fsdp_gather_dtype", "")
+                         == "bfloat16")))
+
+
+def _kernel_cells(session) -> list:
+    from repro.analyze.kernel_check import shipped_kernel_specs
+
+    cfg = session.cfg
+    d = int(getattr(cfg, "d_model", 512)) or 512
+    heads = int(getattr(cfg, "n_heads", 8)) or 8
+    hd = int(cfg.resolved_head_dim) if hasattr(cfg, "resolved_head_dim") \
+        else max(d // heads, 8)
+    return shipped_kernel_specs(
+        # SSM archs have no MLP (d_ff == 0): check the kernel at 4*d
+        d_model=d, d_ff=int(getattr(cfg, "d_ff", 0) or 4 * d), heads=heads,
+        head_dim=max(int(hd), 8), batch=max(int(session.spec.batch), 1),
+        seq=max(int(session.spec.opt("prompt_len", 8)), 8) * 2 + 1,
+        page=int(session.spec.opt("page_size", 8)),
+        n_pool=int(session.spec.opt("pool_pages", 6)))
+
+
+def analyze_session(session, *, compile: bool = True, allowlist_path=None,
+                    check_kernels: bool = True) -> list[Finding]:
+    """All three rule families over one Session's step graphs.
+
+    ``compile=False`` skips the HLO wire lint (jaxpr + kernel rules only)
+    — much faster, but blind to collectives.  ``allowlist_path=None``
+    skips allowlisting entirely (the CLI passes ``analyze.toml``).
+    """
+    from repro.analyze.kernel_check import check_kernel_spec
+    from repro.analyze.precision_flow import lint_jaxpr
+    from repro.analyze.wire_lint import check_comm_report, lint_module
+    from repro.roofline.hlo_parse import parse_module
+
+    findings: list[Finding] = []
+    spec = session.spec
+
+    if spec.workload == "fl-sim":
+        findings.append(Finding(
+            rule="analyze.skipped", severity="info",
+            message="fl-sim cells have no model-zoo step graph to lint",
+            key=f"fl-sim:{spec.arch}", cell=f"fl-sim:{spec.arch}"))
+    else:
+        axis_sizes = dict(zip(session.mesh.axis_names,
+                              session.mesh.devices.shape))
+        policy = session.policy
+        for label, shape in lint_cells(session):
+            traced, meta = session.trace(shape)
+            kind = meta["kind"]
+            findings.extend(lint_jaxpr(
+                traced.jaxpr, policy=policy, axis_sizes=axis_sizes,
+                cell=label,
+                expect_fastpath=(policy.lazy and policy.packed
+                                 and kind == "decode")))
+            if compile:
+                compiled = traced.lower().compile()
+                mc = parse_module(compiled.as_text())
+                findings.extend(lint_module(
+                    mc, _wire_context(session, kind), cell=label))
+                if kind == "train":
+                    findings.extend(check_comm_report(
+                        mc, session.comm_report(), cell=label))
+
+    if check_kernels and spec.workload != "fl-sim":
+        for ks in _kernel_cells(session):
+            findings.extend(check_kernel_spec(ks, cell=f"kernels:{ks.name}"))
+
+    if allowlist_path:
+        findings = apply_allowlist(findings, load_allowlist(allowlist_path))
+    return findings

@@ -678,13 +678,15 @@ class Session:
     # ------------------------------------------------------------------
     # dryrun: AOT lower + compile + roofline
     # ------------------------------------------------------------------
-    def lower(self, shape=None, variant: dict | None = None):
-        """AOT-lower + compile one (arch x shape) cell on this mesh.
+    def trace(self, shape=None, variant: dict | None = None):
+        """AOT-trace one (arch x shape) cell on this mesh — no compile.
 
         ``shape``: a shape-cell name from ``repro.configs.shapes_for`` or an
         explicit :class:`~repro.configs.base.ShapeSpec`.  Packed serving
         weights come from the session policy (``policy.packed``), not a knob.
-        Returns ``(compiled, lowered, meta)``.
+        Returns ``(traced, meta)`` — ``traced.jaxpr`` feeds the static
+        precision lint (:mod:`repro.analyze`), ``traced.lower()`` continues
+        to the compile path :meth:`lower` wraps.
         """
         import dataclasses as _dc
 
@@ -750,7 +752,7 @@ class Session:
                     axes.batch_axes if len(axes.batch_axes) > 1
                     else axes.batch_axes[0])))
             step = ts.fn(batch_tree)
-            lowered = step.lower(params_g, opt_g, batch_g, delta_g, rng_sds)
+            traced = step.trace(params_g, opt_g, batch_g, delta_g, rng_sds)
 
         elif cell.kind == "prefill":
             wrap, pspecs = build_prefill_step(model, mesh, axes)
@@ -767,7 +769,7 @@ class Session:
                     batch_tree),
                 bspecs, mesh)
             step = wrap(batch_tree)
-            lowered = step.lower(params_g, batch_g)
+            traced = step.trace(params_g, batch_g)
 
         else:  # decode
             sv_axes = serving_axes(axes, cell.global_batch, mesh)
@@ -783,9 +785,15 @@ class Session:
                             lambda l: jnp.zeros(l.shape, l.dtype),
                             pshapes_local),
                         self.policy, jax.random.PRNGKey(0)))
+            page_size = spec.opt("page_size")
             ss = build_decode_step(model, mesh, sv_axes, s_max=cell.seq_len,
                                    batch_global=cell.global_batch,
-                                   params_tree=params_tree)
+                                   params_tree=params_tree,
+                                   policy=self.policy,
+                                   page_size=(None if page_size is None
+                                              else int(page_size)),
+                                   pool_pages=spec.opt("pool_pages"),
+                                   attn_impl=spec.opt("attn_impl", "ref"))
             params_g = globalize(ss.param_shapes, ss.param_specs, mesh,
                                  dtype_map=_bf16)
             caches_g = globalize(ss.caches_shape, ss.cache_specs, mesh)
@@ -799,14 +807,38 @@ class Session:
                         (l.shape[0] // max(bsz, 1),) + l.shape[1:], l.dtype),
                     batch_tree),
                 bspecs, mesh)
-            lowered = ss.fn.lower(params_g, batch_g, caches_g)
+            traced = ss.fn.trace(params_g, batch_g, caches_g)
 
-        compiled = lowered.compile()
         n_dev = int(np.prod(mesh.devices.shape))
         meta = dict(arch=spec.arch, shape=cell.name, mesh=spec.mesh,
                     n_devices=n_dev, kind=cell.kind, seq_len=cell.seq_len,
                     global_batch=cell.global_batch)
-        return compiled, lowered, meta
+        return traced, meta
+
+    def lower(self, shape=None, variant: dict | None = None):
+        """AOT-lower + compile one cell (the :meth:`trace` continuation).
+
+        Returns ``(compiled, lowered, meta)``.
+        """
+        traced, meta = self.trace(shape, variant)
+        lowered = traced.lower()
+        return lowered.compile(), lowered, meta
+
+    def analyze(self, *, compile: bool = True, allowlist: str | None = None,
+                check_kernels: bool = True) -> list:
+        """Static precision / wire / kernel lint over this spec's graphs.
+
+        Traces (and, with ``compile=True``, compiles) the step graphs the
+        RunSpec implies and returns a list of
+        :class:`repro.analyze.findings.Finding` — nothing is executed.
+        ``allowlist`` names an ``analyze.toml`` to mark known-legitimate
+        findings (``None`` skips allowlisting).
+        """
+        from repro.analyze.runner import analyze_session
+
+        return analyze_session(self, compile=compile,
+                               allowlist_path=allowlist,
+                               check_kernels=check_kernels)
 
     def run_dryrun(self, shape=None, variant: dict | None = None,
                    *, verbose: bool = True) -> dict:

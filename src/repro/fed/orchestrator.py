@@ -31,11 +31,11 @@ from repro.api.precision import PrecisionPolicy
 from repro.ckpt import CheckpointManager
 from repro.core import baselines as baselines_mod
 from repro.core.channel import ChannelModel
-from repro.core.convergence import error_budget_bound, quant_noise
+from repro.core.convergence import error_budget_bound
 from repro.core.energy import CommParams, DeviceProfile, alpha_coefficients
 from repro.core.gbd import run_gbd
 from repro.core.master import MasterSpec
-from repro.core.primal import PrimalData, solve_primal
+from repro.core.primal import PrimalData
 
 log = logging.getLogger(__name__)
 

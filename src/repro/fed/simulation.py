@@ -9,10 +9,9 @@ SGD.  Clients map onto the vmapped leading axis; the pod trainer
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fwq import FWQConfig, delta_for_clients, make_fwq_round, make_tree_quant_loss

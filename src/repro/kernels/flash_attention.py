@@ -28,9 +28,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.spec import BlockOperand, KernelSpec, ScratchSpec
+
 DEFAULT_BLOCKS = (256, 256)  # (block_q, block_k)
 
 _NEG_INF = -1e30
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# Index maps are module-level so the pallas_call and the static-checker
+# metadata (attention_spec / decode_spec) share one definition.
+
+
+def _q_map(b, i, j):
+    return (b, i, 0)
+
+
+def _kv_map(b, i, j):
+    return (b, j, 0)
 
 
 def _body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
@@ -100,11 +118,11 @@ def flash_attention_kernel(q, k, v, *, causal: bool = True,
                           s_valid=S if s_valid is None else s_valid),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq, D), _q_map),
+            pl.BlockSpec((1, bk, D), _kv_map),
+            pl.BlockSpec((1, bk, D), _kv_map),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_specs=pl.BlockSpec((1, bq, D), _q_map),
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),   # running max
@@ -113,6 +131,35 @@ def flash_attention_kernel(q, k, v, *, causal: bool = True,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def attention_spec(BH: int, S: int, D: int, *,
+                   blocks=DEFAULT_BLOCKS) -> KernelSpec:
+    """Static BlockSpec metadata for the wrapper-level flash-attention call.
+
+    ``S`` is the RAW sequence length; the spec mirrors
+    :func:`repro.kernels.ops.flash_attention`'s padding to the 128-aligned
+    block multiple.
+    """
+    bq = bk = min(blocks[0], _round_up(S, 128))
+    Sp = _round_up(S, bq)
+    grid = (BH, Sp // bq, Sp // bk)
+    return KernelSpec(
+        name="flash_attention",
+        source="flash_attention.py:flash_attention_kernel",
+        grid=grid,
+        inputs=(
+            BlockOperand("q", (BH, Sp, D), (1, bq, D), _q_map),
+            BlockOperand("k", (BH, Sp, D), (1, bk, D), _kv_map),
+            BlockOperand("v", (BH, Sp, D), (1, bk, D), _kv_map),
+        ),
+        outputs=(BlockOperand("out", (BH, Sp, D), (1, bq, D), _q_map),),
+        scratch=(
+            ScratchSpec("m", (bq, 1), "float32"),
+            ScratchSpec("l", (bq, 1), "float32"),
+            ScratchSpec("acc", (bq, D), "float32", binds="out"),
+        ),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +211,24 @@ def _decode_body(pt_ref, len_ref, q_ref, k_ref, v_ref, acc_out, m_out, l_out,
         l_out[0, 0] = l_ref[...]
 
 
+def _decode_maps(n_pmax: int):
+    """The decode grid's index maps, closed over the page-table stride.
+
+    Shared by the ``pallas_call`` (which passes the prefetched scalars
+    ``pt``/``ln``) and :func:`decode_spec` (which binds a concrete table).
+    ``kv_map`` clamps unallocated (-1) entries to page 0; the kernel body's
+    validity guard keeps that page's contents out of the softmax.
+    """
+
+    def q_map(b, h, j, pt, ln):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, j, pt, ln):
+        return (jnp.maximum(pt[b * n_pmax + j], 0), 0, h, 0)
+
+    return q_map, kv_map
+
+
 def flash_decode_kernel(q, k_pages, v_pages, page_table, lengths, *,
                         interpret=False):
     """One decode token per slot against a paged KV cache.
@@ -186,13 +251,7 @@ def flash_decode_kernel(q, k_pages, v_pages, page_table, lengths, *,
     page = k_pages.shape[1]
     n_pmax = page_table.shape[1]
     scale = hd ** -0.5
-
-    def q_map(b, h, j, pt, ln):
-        return (b, h, 0, 0)
-
-    def kv_map(b, h, j, pt, ln):
-        return (jnp.maximum(pt[b * n_pmax + j], 0), 0, h, 0)
-
+    q_map, kv_map = _decode_maps(n_pmax)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, n_pmax),
@@ -221,3 +280,52 @@ def flash_decode_kernel(q, k_pages, v_pages, page_table, lengths, *,
                    jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32)],
         interpret=interpret,
     )(page_table.reshape(-1), lengths, q, k_pages, v_pages)
+
+
+def decode_spec(B: int, KV: int, G: int, hd: int, *, page: int, n_pool: int,
+                page_table, lengths) -> KernelSpec:
+    """Static BlockSpec metadata for one flash-decode launch.
+
+    ``page_table`` (B, n_pmax) / ``lengths`` (B,) are CONCRETE int arrays
+    (numpy is fine): the checker enumerates the same table-dereferencing
+    index maps the scalar-prefetch machinery would, so an index pointing
+    outside the page pool is a static finding, not a silent DMA.  The G
+    axis must already be padded to the fp32 sublane minimum (8), as
+    :func:`repro.kernels.ops.flash_paged_decode` does.
+    """
+    import numpy as np
+
+    pt = np.asarray(page_table, dtype=np.int64)
+    ln = np.asarray(lengths, dtype=np.int64)
+    n_pmax = pt.shape[1]
+    pt_flat = pt.reshape(-1)
+    q_map, kv_map = _decode_maps(n_pmax)
+
+    def _bind(m):
+        return lambda b, h, j: m(b, h, j, pt_flat, ln)
+
+    grid = (B, KV, n_pmax)
+    # pool rows are addressed through the table: repeated / skipped rows are
+    # legal, so the k/v pools check OOB only ("any" coverage)
+    return KernelSpec(
+        name="flash_decode",
+        source="flash_attention.py:flash_decode_kernel",
+        grid=grid,
+        inputs=(
+            BlockOperand("q", (B, KV, G, hd), (1, 1, G, hd), _bind(q_map)),
+            BlockOperand("k_pages", (n_pool, page, KV, hd),
+                         (1, page, 1, hd), _bind(kv_map), coverage="any"),
+            BlockOperand("v_pages", (n_pool, page, KV, hd),
+                         (1, page, 1, hd), _bind(kv_map), coverage="any"),
+        ),
+        outputs=(
+            BlockOperand("acc", (B, KV, G, hd), (1, 1, G, hd), _bind(q_map)),
+            BlockOperand("m", (B, KV, G, 1), (1, 1, G, 1), _bind(q_map)),
+            BlockOperand("l", (B, KV, G, 1), (1, 1, G, 1), _bind(q_map)),
+        ),
+        scratch=(
+            ScratchSpec("m_run", (G, 1), "float32"),
+            ScratchSpec("l_run", (G, 1), "float32"),
+            ScratchSpec("acc_run", (G, hd), "float32", binds="acc"),
+        ),
+    )

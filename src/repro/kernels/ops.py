@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import (flash_attention_kernel,
                                            flash_decode_kernel)
-from repro.kernels.quant_matmul import quant_matmul_kernel
+from repro.kernels.quant_matmul import choose_blocks, quant_matmul_kernel
 from repro.kernels.sr_quant import sr_quant_fake_kernel, sr_quant_pack_kernel
 
 
@@ -86,11 +86,9 @@ def quant_matmul(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray):
     """
     M, K = x.shape
     _, N = codes.shape
-    # sublane minima: 8 for f32 x-blocks, 16 for bf16; 128-lane alignment on
-    # the contraction/output dims (see pallas_guide §Tiling Constraints).
-    bm = min(256, _round_up(M, 8 if x.dtype == jnp.float32 else 16))
-    bn = min(256, _round_up(N, 128))
-    bk = min(512, _round_up(K, 128))
+    # block choice shared with the static checker's kernel_spec — see
+    # repro.kernels.quant_matmul.choose_blocks for the alignment rules
+    bm, bn, bk = choose_blocks(M, K, N, x.dtype)
     xp = _pad2(x, bm, bk)
     cp = _pad2(codes, bk, bn)
     out = quant_matmul_kernel(xp, cp, scale.reshape(1, 1),

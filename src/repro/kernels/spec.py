@@ -1,0 +1,66 @@
+"""Declarative BlockSpec metadata the kernels export for static checking.
+
+Each Pallas kernel in this package also publishes a :class:`KernelSpec`
+mirroring exactly what its ``pallas_call`` will do for a given problem size:
+the grid, every operand's padded shape / block shape / index map, and the
+VMEM scratch allocations.  ``repro.analyze.kernel_check`` enumerates the
+index maps over the grid against these specs — coverage, out-of-bounds DMA,
+scratch consistency — without ever running the kernel.
+
+The index-map callables here are the SAME functions the ``pallas_call``
+uses (module-level, not per-call lambdas), so the spec cannot drift from
+the kernel: a change to an index map changes both the lowering and the
+checked metadata.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockOperand:
+    """One pallas_call operand: padded array shape, block, and index map.
+
+    ``coverage``: ``"full"`` — every tile of ``shape`` must be visited by
+    the index map over the grid (weights, activations, outputs);
+    ``"any"`` — partial/repeated visits are legal (shared pools addressed
+    through a page table, broadcast scalars revisited every step).
+    """
+
+    name: str
+    shape: tuple
+    block: tuple
+    index_map: object               # callable (*grid_ids) -> block indices
+    coverage: str = "full"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScratchSpec:
+    """One VMEM scratch allocation.
+
+    ``binds``: name of the operand whose block this scratch accumulates
+    into (its shape must equal that block with leading 1-dims squeezed),
+    or ``None`` for free-form carry state (running max / running sum).
+    """
+
+    name: str
+    shape: tuple
+    dtype: str
+    binds: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Static description of one pallas_call at a concrete problem size."""
+
+    name: str
+    source: str                     # "file.py:kernel_fn" provenance
+    grid: tuple
+    inputs: tuple                   # tuple[BlockOperand, ...]
+    outputs: tuple                  # tuple[BlockOperand, ...]
+    scratch: tuple = ()             # tuple[ScratchSpec, ...]
+
+    @property
+    def operands(self):
+        return self.inputs + self.outputs

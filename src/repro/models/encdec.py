@@ -14,9 +14,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.attention import (
-    AttnDims, KVCache, cross_attention, cross_attention_cached,
-    decode_self_attention, init_attention, init_kv_cache,
-    init_paged_kv_cache, project_cross_kv, self_attention,
+    cross_attention, cross_attention_cached, decode_self_attention,
+    init_attention, init_kv_cache, init_paged_kv_cache, project_cross_kv,
+    self_attention,
 )
 from repro.models.common import ParamCtx, init_dense, key_iter
 from repro.models.transformer import attn_dims, padded_vocab_local, _stack

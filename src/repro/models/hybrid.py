@@ -19,13 +19,13 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.attention import (
-    KVCache, decode_self_attention, init_attention, init_kv_cache,
+    decode_self_attention, init_attention, init_kv_cache,
     init_paged_kv_cache, self_attention,
 )
 from repro.models.common import ParamCtx, init_dense, key_iter
 from repro.models.moe import init_moe, moe_block
 from repro.models.ssm import (
-    SSMCache, SSMDims, init_ssm, init_ssm_cache, ssm_block, ssm_decode_step,
+    SSMDims, init_ssm, init_ssm_cache, ssm_block, ssm_decode_step,
 )
 from repro.models.transformer import attn_dims, moe_dims, padded_vocab_local, _stack
 

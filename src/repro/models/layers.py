@@ -12,7 +12,6 @@ Tensor-parallel conventions (Megatron style, executed inside shard_map):
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -14,14 +14,13 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.models import encdec, hybrid, ssm_lm, transformer, vlm
-from repro.models.common import ParamCtx
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.common import ParamCtx, init_dense, key_iter
 from repro.models.hybrid import ssm_dims
-from repro.models.ssm import SSMCache, init_ssm, init_ssm_cache, ssm_block, ssm_decode_step
+from repro.models.ssm import init_ssm, init_ssm_cache, ssm_block, ssm_decode_step
 from repro.models.transformer import padded_vocab_local, _stack
 
 

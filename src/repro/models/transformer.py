@@ -13,8 +13,6 @@ Assembly notes
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +21,6 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.attention import (
     AttnDims,
-    KVCache,
     decode_self_attention,
     init_attention,
     init_kv_cache,

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.attention import (
-    KVCache, cross_attention, cross_attention_cached, decode_self_attention,
+    cross_attention, cross_attention_cached, decode_self_attention,
     init_attention, init_kv_cache, init_paged_kv_cache, prefill_kv_cache,
     project_cross_kv, self_attention,
 )

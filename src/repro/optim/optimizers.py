@@ -10,7 +10,7 @@ API mirrors optax: ``init(params) -> state``;
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ Terms (seconds, per training/serving step, per device):
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 from repro.roofline.hw import ChipSpec, TPU_V5E

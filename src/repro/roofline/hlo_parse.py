@@ -22,12 +22,22 @@ Conventions:
     all-reduce:        2(n-1)/n * result
     all-to-all:        (n-1)/n * result
     collective-permute: result
+
+Besides the aggregate :class:`ModuleCosts` totals, every collective
+instruction is recorded as a :class:`CollectiveOp` (kind, element dtype,
+elements, bytes, group size, loop multiplier, instruction name) — the wire
+lint in ``repro.analyze.wire_lint`` consumes those records.  Hardening
+notes: ``*-done`` halves are never counted (only ``-start`` carries
+shapes); ``async-start`` wrappers contribute through their called
+computation, the wrapper line itself is skipped; multi-result tuple
+collectives (the all-reduce combiner's output) sum their tuple parts;
+explicit single-participant ``replica_groups={{0}}`` groups move zero wire
+bytes (degenerate collectives on 1-device meshes).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 
@@ -42,8 +52,8 @@ _SHAPE_RE = re.compile(r"\b(pred|[su](?:4|8|16|32|64)|bf16|f16|f32|f64|c64|c128)
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\((.*)\)\s*->")
 _OPCODE_RE = re.compile(
-    r"\b(dot|while|fusion|call|conditional|all-gather|all-reduce|reduce-scatter"
-    r"|all-to-all|collective-permute)(?:-start)?\(")
+    r"\b(dot|while|fusion|call|conditional|async-start|all-gather|all-reduce"
+    r"|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _BODY_RE = re.compile(r"body=(%[\w\.\-]+)")
 _COND_RE = re.compile(r"condition=(%[\w\.\-]+)")
@@ -67,6 +77,31 @@ def _shape_bytes(dtype, dims):
 
 
 @dataclasses.dataclass
+class CollectiveOp:
+    """One collective instruction, as executed (loop multiplier applied).
+
+    ``parts`` lists the result tuple's (dtype, elems) pairs — a single
+    non-tuple result is one part; ``dtype``/``elems`` summarize the first /
+    total.  ``bytes`` and ``wire_bytes`` are per execution; multiply by
+    ``mult`` for the per-step totals the aggregate fields report.
+    """
+
+    kind: str
+    dtype: str
+    elems: int
+    bytes: float                      # result bytes, one execution
+    wire_bytes: float                 # ring-model wire bytes, one execution
+    group_size: int
+    mult: float                       # loop trip multiplier from the walk
+    name: str                         # instruction var, e.g. %all-reduce.3
+    computation: str
+    parts: tuple = ()
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
 class ModuleCosts:
     flops: float
     dot_bytes: float
@@ -74,6 +109,7 @@ class ModuleCosts:
     collective_by_kind: dict
     collective_counts: dict
     n_while: int
+    collectives: list = dataclasses.field(default_factory=list)
 
     def to_dict(self):
         return dataclasses.asdict(self)
@@ -118,6 +154,7 @@ def parse_module(text: str) -> ModuleCosts:
         counts = defaultdict(int)
         edges = []
         n_while = 0
+        coll_ops: list[CollectiveOp] = []
         for line in lines:
             mo = _OPCODE_RE.search(line)
             if not mo:
@@ -156,7 +193,9 @@ def parse_module(text: str) -> ModuleCosts:
                     edges.append((mb.group(1), trip))
                 if mcnd:
                     edges.append((mcnd.group(1), trip))
-            elif op in ("fusion", "call", "conditional"):
+            elif op in ("fusion", "call", "conditional", "async-start"):
+                # async-start wraps a collective in a called computation —
+                # count the inner op once via the edge, never the wrapper
                 for mr in (_CALLS_RE, _TOAPPLY_RE):
                     mm = mr.search(line)
                     if mm:
@@ -176,14 +215,21 @@ def parse_module(text: str) -> ModuleCosts:
                     if len(res) >= 2:
                         res = res[len(res) // 2:]
                 out_b = sum(_shape_bytes(d, dims)[0] for d, dims in res)
+                parts = tuple((d, _shape_bytes(d, dims)[1])
+                              for d, dims in res)
+                elems = sum(e for _, e in parts)
                 mg = _GROUP_RE.search(line)
                 if mg:
                     n = len(mg.group(1).split(","))
                 else:
                     mg2 = _GROUP_V2_RE.search(line)
                     n = int(mg2.group(2)) if mg2 else 2
-                n = max(n, 2)
-                if op == "all-gather":
+                if n <= 1:
+                    # explicit single-participant group: a degenerate
+                    # collective on a 1-device (sub)mesh — nothing crosses
+                    # a wire
+                    wire = 0.0
+                elif op == "all-gather":
                     wire = (n - 1) / n * out_b
                 elif op == "reduce-scatter":
                     wire = (n - 1) * out_b
@@ -195,8 +241,15 @@ def parse_module(text: str) -> ModuleCosts:
                     wire = out_b
                 coll[op] += wire
                 counts[op] += 1
+                inst = md.group(1) if md else "%?"
+                coll_ops.append(CollectiveOp(
+                    kind=op, dtype=parts[0][0] if parts else "?",
+                    elems=elems, bytes=out_b, wire_bytes=wire,
+                    group_size=n, mult=1.0, name=inst, computation=name,
+                    parts=parts))
         comp_cost[name] = dict(flops=flops, dbytes=dbytes, coll=dict(coll),
-                               counts=dict(counts), edges=edges, n_while=n_while)
+                               counts=dict(counts), edges=edges,
+                               n_while=n_while, coll_ops=coll_ops)
 
     # ---- pass 3: propagate multipliers from ENTRY --------------------------
     entry = None
@@ -211,6 +264,7 @@ def parse_module(text: str) -> ModuleCosts:
     total = dict(flops=0.0, dbytes=0.0, n_while=0)
     coll_total = defaultdict(float)
     counts_total = defaultdict(int)
+    coll_records: list[CollectiveOp] = []
     seen_stack = []
 
     def walk(name, mult):
@@ -225,6 +279,8 @@ def parse_module(text: str) -> ModuleCosts:
             coll_total[k] += mult * v
         for k, v in c["counts"].items():
             counts_total[k] += v
+        for rec in c["coll_ops"]:
+            coll_records.append(dataclasses.replace(rec, mult=mult))
         for callee, m in c["edges"]:
             walk(callee, mult * m)
         seen_stack.pop()
@@ -236,4 +292,5 @@ def parse_module(text: str) -> ModuleCosts:
         collective_by_kind=dict(coll_total),
         collective_counts=dict(counts_total),
         n_while=total["n_while"],
+        collectives=coll_records,
     )

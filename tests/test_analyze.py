@@ -1,0 +1,425 @@
+"""Static analysis (repro.analyze): precision flow, wire lint, kernel checker.
+
+Seeded-regression contract: each rule family has a test that plants exactly
+one defect and asserts exactly ONE finding with file/op provenance — and a
+matching test that the shipped code produces none.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  (installs the jax compat shims)
+import jax
+import jax.numpy as jnp
+
+from repro.analyze.allowlist import AllowEntry, apply_allowlist, load_allowlist
+from repro.analyze.findings import Finding, at_or_above, worst_severity
+from repro.analyze.kernel_check import check_kernel_spec, shipped_kernel_specs
+from repro.analyze.precision_flow import lint_jaxpr
+from repro.analyze.wire_lint import (WireContext, check_comm_report,
+                                     expected_gathers, lint_module)
+from repro.api.precision import PrecisionPolicy
+from repro.kernels.spec import BlockOperand, KernelSpec, ScratchSpec
+from repro.roofline.hlo_parse import CollectiveOp, ModuleCosts, parse_module
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures", "hlo")
+
+
+def _fixture(name: str) -> str:
+    with open(os.path.join(FIXTURES, name)) as f:
+        return f.read()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# hlo_parse hardening: CollectiveOp records from checked-in HLO text
+# ---------------------------------------------------------------------------
+
+
+class TestHloCollectiveRecords:
+    def test_f32_allreduce_record(self):
+        mc = parse_module(_fixture("allreduce_f32.txt"))
+        recs = [r for r in mc.collectives if r.kind == "all-reduce"]
+        assert len(recs) == 1
+        r = recs[0]
+        assert r.dtype == "f32"
+        assert r.elems == 1024 * 256
+        assert r.group_size == 4
+        assert r.name == "%all-reduce.1"
+        assert r.wire_bytes == pytest.approx(2 * 3 / 4 * 1024 * 256 * 4)
+
+    def test_start_done_pair_counted_once(self):
+        mc = parse_module(_fixture("allreduce_start_done.txt"))
+        recs = [r for r in mc.collectives if r.kind == "all-reduce"]
+        assert len(recs) == 1, "the -done half must not double-count"
+        assert recs[0].elems == 512 * 128
+        assert mc.collective_counts.get("all-reduce") == 1
+
+    def test_tuple_parts_summed(self):
+        mc = parse_module(_fixture("allreduce_tuple.txt"))
+        recs = [r for r in mc.collectives if r.kind == "all-reduce"]
+        assert len(recs) == 1
+        assert recs[0].parts == (("s32", 100), ("s32", 156))
+        assert recs[0].elems == 256
+
+    def test_degenerate_group_moves_nothing(self):
+        mc = parse_module(_fixture("degenerate_group.txt"))
+        recs = [r for r in mc.collectives if r.kind == "all-reduce"]
+        assert len(recs) == 1
+        assert recs[0].group_size == 1
+        assert recs[0].wire_bytes == 0.0
+        assert mc.collective_bytes == 0.0
+
+
+# ---------------------------------------------------------------------------
+# wire lint
+# ---------------------------------------------------------------------------
+
+
+def _ctx(**kw):
+    kw.setdefault("policy", PrecisionPolicy(comm=8))
+    kw.setdefault("kind", "train")
+    kw.setdefault("n_clients", 4)
+    return WireContext(**kw)
+
+
+def _mc(*records):
+    return ModuleCosts(flops=0, dot_bytes=0, collective_bytes=0,
+                       collective_by_kind={}, collective_counts={},
+                       n_while=0, collectives=list(records))
+
+
+def _rec(kind, dtype, elems, group=4, **kw):
+    kw.setdefault("bytes", 0.0)
+    kw.setdefault("wire_bytes", 0.0)
+    kw.setdefault("mult", 1.0)
+    kw.setdefault("name", f"%{kind}.0")
+    kw.setdefault("computation", "%main.0")
+    return CollectiveOp(kind=kind, dtype=dtype, elems=elems,
+                        group_size=group, **kw)
+
+
+class TestWireLint:
+    def test_f32_allreduce_under_low_bit_comm_exactly_one(self):
+        mc = parse_module(_fixture("allreduce_f32.txt"))
+        found = lint_module(mc, _ctx(), cell="t")
+        assert len(found) == 1
+        f = found[0]
+        assert f.rule == "wire.f32_allreduce"
+        assert f.severity == "error"
+        assert "%all-reduce.1" in f.where
+
+    def test_uncompressed_context_not_flagged(self):
+        mc = parse_module(_fixture("allreduce_f32.txt"))
+        assert lint_module(mc, _ctx(kind="decode")) == []
+        assert lint_module(mc, _ctx(n_clients=1)) == []
+        assert lint_module(
+            mc, _ctx(policy=PrecisionPolicy())) == []   # comm=32
+
+    def test_degenerate_group_never_flagged(self):
+        mc = parse_module(_fixture("degenerate_group.txt"))
+        assert lint_module(mc, _ctx()) == []
+
+    def test_narrow_allreduce(self):
+        # wire_dtype(comm=8, n=4) = int16; s8 accumulator overflows
+        found = lint_module(_mc(_rec("all-reduce", "s8", 4096)), _ctx())
+        assert [f.rule for f in found] == ["wire.narrow_allreduce"]
+        assert found[0].severity == "error"
+
+    def test_wide_allreduce_warns(self):
+        found = lint_module(_mc(_rec("all-reduce", "s32", 4096)), _ctx())
+        assert [f.rule for f in found] == ["wire.wide_allreduce"]
+        assert found[0].severity == "warn"
+
+    def test_matching_width_clean(self):
+        found = lint_module(_mc(_rec("all-reduce", "s16", 4096)), _ctx())
+        assert found == []
+
+    def test_unexpected_allgather(self):
+        ctx = _ctx(kind="decode", fsdp=2,
+                   expected_gather_dtypes=expected_gathers(
+                       fsdp=2, tp=1, packed=True))
+        ok = lint_module(_mc(_rec("all-gather", "s8", 4096, group=2)), ctx)
+        assert ok == []
+        bad = lint_module(_mc(_rec("all-gather", "f16", 4096, group=2)), ctx)
+        assert [f.rule for f in bad] == ["wire.unexpected_allgather"]
+
+    def test_pure_dp_mesh_expects_no_gathers(self):
+        assert expected_gathers(fsdp=1, tp=1, packed=False) == frozenset()
+        ctx = _ctx(expected_gather_dtypes=frozenset())
+        bad = lint_module(_mc(_rec("all-gather", "f32", 4096)), ctx)
+        assert [f.rule for f in bad] == ["wire.unexpected_allgather"]
+
+
+class TestCommReportConsistency:
+    def test_matching_report_clean(self):
+        mc = parse_module(_fixture("allreduce_tuple.txt"))
+        report = {"wire_dtype": "int32", "replicated_elems": 256}
+        assert check_comm_report(mc, report) == []
+
+    def test_doctored_report_flagged_once(self):
+        mc = parse_module(_fixture("allreduce_tuple.txt"))
+        report = {"wire_dtype": "int32", "replicated_elems": 300}
+        found = check_comm_report(mc, report, cell="t")
+        assert len(found) == 1
+        assert found[0].rule == "wire.comm_report_mismatch"
+        assert found[0].severity == "error"
+
+    def test_uncompressed_report_noop(self):
+        mc = parse_module(_fixture("allreduce_f32.txt"))
+        assert check_comm_report(mc, {"wire_dtype": "none"}) == []
+        assert check_comm_report(mc, {"wire_dtype": "float32"}) == []
+
+
+# ---------------------------------------------------------------------------
+# precision-flow lint (taint walk over traced jaxprs)
+# ---------------------------------------------------------------------------
+
+
+LAZY = PrecisionPolicy.lazy_int8()
+
+
+class TestPrecisionFlow:
+    def test_eager_dequant_matmul_exactly_one(self):
+        def step(x, codes, scale):
+            w = codes.astype(jnp.float32) * scale     # eager dequant
+            return x @ w
+
+        traced = jax.jit(step).trace(
+            _sds((4, 64), jnp.float32), _sds((64, 64), jnp.int8),
+            _sds((), jnp.float32))
+        found = [f for f in lint_jaxpr(traced.jaxpr, policy=LAZY)
+                 if f.severity == "error"]
+        assert len(found) == 1
+        f = found[0]
+        assert f.rule == "precision.eager_dequant"
+        assert "test_analyze.py" in f.key            # file provenance
+        assert "rhs" in f.message
+
+    def test_scan_body_dequant_reported_once(self):
+        def step(x, codes, scale):
+            def body(h, c):
+                return h @ (c.astype(jnp.float32) * scale), ()
+            h, _ = jax.lax.scan(body, x, codes)
+            return h
+
+        traced = jax.jit(step).trace(
+            _sds((4, 64), jnp.float32), _sds((3, 64, 64), jnp.int8),
+            _sds((), jnp.float32))
+        found = [f for f in lint_jaxpr(traced.jaxpr, policy=LAZY)
+                 if f.rule == "precision.eager_dequant"]
+        assert len(found) == 1, "loop fixpoint must dedupe per-layer reports"
+
+    def test_quant_matmul_fast_path_clean(self):
+        from repro.kernels.ops import quant_matmul
+
+        traced = jax.jit(quant_matmul).trace(
+            _sds((8, 128), jnp.float32), _sds((128, 128), jnp.int8),
+            _sds((), jnp.float32))
+        found = lint_jaxpr(traced.jaxpr, policy=LAZY, expect_fastpath=True)
+        assert found == []
+
+    def test_no_fastpath_warning(self):
+        traced = jax.jit(lambda x, w: x @ w).trace(
+            _sds((4, 64), jnp.float32), _sds((64, 64), jnp.float32))
+        found = lint_jaxpr(traced.jaxpr, policy=LAZY, expect_fastpath=True)
+        assert [f.rule for f in found] == ["precision.no_fastpath"]
+        assert found[0].severity == "warn"
+        # not expected (e.g. prefill): no warning
+        assert lint_jaxpr(traced.jaxpr, policy=LAZY,
+                          expect_fastpath=False) == []
+
+    def test_int32_token_ids_do_not_taint(self):
+        def step(tokens, table, w):
+            x = jnp.take(table, tokens, axis=0)       # embedding gather
+            return x @ w
+
+        traced = jax.jit(step).trace(
+            _sds((4,), jnp.int32), _sds((100, 64), jnp.float32),
+            _sds((64, 64), jnp.float32))
+        found = [f for f in lint_jaxpr(traced.jaxpr, policy=LAZY)
+                 if f.rule == "precision.eager_dequant"]
+        assert found == []
+
+    def test_narrow_psum_accumulator_exactly_one(self):
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("x",))
+        fn = jax.shard_map(lambda c: jax.lax.psum(c, "x"), mesh=mesh,
+                           in_specs=P(), out_specs=P())
+        traced = jax.jit(fn).trace(_sds((4, 64), jnp.int8))
+        # lint as if the axis had 4 participants: 4*(2^8-1) needs int16
+        found = lint_jaxpr(traced.jaxpr,
+                           policy=PrecisionPolicy(comm=8),
+                           axis_sizes={"x": 4})
+        assert [f.rule for f in found] == ["precision.narrow_accumulator"]
+        assert found[0].severity == "error"
+        assert "test_analyze.py" in found[0].key
+        # a wide-enough accumulator is clean
+        fn32 = jax.shard_map(lambda c: jax.lax.psum(c, "x"), mesh=mesh,
+                             in_specs=P(), out_specs=P())
+        traced32 = jax.jit(fn32).trace(_sds((4, 64), jnp.int32))
+        assert lint_jaxpr(traced32.jaxpr, policy=PrecisionPolicy(comm=8),
+                          axis_sizes={"x": 4}) == []
+
+
+# ---------------------------------------------------------------------------
+# kernel checker
+# ---------------------------------------------------------------------------
+
+
+class TestKernelChecker:
+    def test_shipped_kernels_clean(self):
+        for spec in shipped_kernel_specs():
+            assert check_kernel_spec(spec) == [], spec.name
+
+    def test_index_map_skipping_last_k_step(self):
+        from repro.kernels.quant_matmul import kernel_spec
+
+        spec = kernel_spec(8, 1024, 256)              # grid k-extent 2
+        assert spec.grid[2] == 2
+        x = spec.inputs[0]
+        broken = dataclasses.replace(
+            spec, inputs=(dataclasses.replace(
+                x, index_map=lambda i, j, k: (i, 0)),) + spec.inputs[1:])
+        found = check_kernel_spec(broken, cell="seeded")
+        assert len(found) == 1
+        f = found[0]
+        assert f.rule == "kernel.coverage_gap"
+        assert f.key == "quant_matmul:x"
+        assert "quant_matmul.py" in f.where
+
+    def test_block_overrunning_unaligned_k(self):
+        from repro.kernels.quant_matmul import (_out_map, _scale_map,
+                                                _w_map, _x_map)
+
+        # K=130 NOT padded to the 128 block: the second k step overruns
+        spec = KernelSpec(
+            name="quant_matmul", source="quant_matmul.py:seeded",
+            grid=(1, 1, 2),
+            inputs=(BlockOperand("x", (8, 130), (8, 128), _x_map),
+                    BlockOperand("codes", (256, 128), (128, 128), _w_map),
+                    BlockOperand("scale", (1, 1), (1, 1), _scale_map,
+                                 coverage="any")),
+            outputs=(BlockOperand("out", (8, 128), (8, 128), _out_map),))
+        found = check_kernel_spec(spec, cell="seeded")
+        assert len(found) == 1
+        assert found[0].rule == "kernel.oob_dma"
+        assert found[0].key == "quant_matmul:x"
+
+    def test_scratch_dtype_rule(self):
+        from repro.kernels.quant_matmul import kernel_spec
+
+        spec = kernel_spec(8, 512, 256)
+        broken = dataclasses.replace(
+            spec, scratch=(ScratchSpec("acc", spec.scratch[0].shape,
+                                       "bfloat16", binds="out"),))
+        found = check_kernel_spec(broken)
+        assert [f.rule for f in found] == ["kernel.scratch_dtype"]
+
+    def test_scratch_shape_rule(self):
+        from repro.kernels.quant_matmul import kernel_spec
+
+        spec = kernel_spec(8, 512, 256)
+        broken = dataclasses.replace(
+            spec, scratch=(ScratchSpec("acc", (8, 8), "float32",
+                                       binds="out"),))
+        found = check_kernel_spec(broken)
+        assert [f.rule for f in found] == ["kernel.scratch_shape"]
+
+    def test_wrapper_padding_matches_choose_blocks(self):
+        from repro.kernels.quant_matmul import choose_blocks, kernel_spec
+
+        # ragged decode shapes: the spec must mirror ops.quant_matmul's pad
+        for m, k, n in [(1, 64, 64), (3, 513, 2048), (7, 130, 384)]:
+            spec = kernel_spec(m, k, n)
+            bm, bn, bk = choose_blocks(m, k, n)
+            assert spec.inputs[0].shape[0] % bm == 0
+            assert spec.inputs[0].shape[1] % bk == 0
+            assert check_kernel_spec(spec) == [], (m, k, n)
+
+
+# ---------------------------------------------------------------------------
+# allowlist + severity plumbing
+# ---------------------------------------------------------------------------
+
+
+class TestAllowlist:
+    def _finding(self, **kw):
+        kw.setdefault("rule", "precision.eager_dequant")
+        kw.setdefault("severity", "error")
+        kw.setdefault("message", "m")
+        kw.setdefault("key", "ops.py:expert_dispatch")
+        return Finding(**kw)
+
+    def test_apply_and_gate(self):
+        entries = [AllowEntry(rule="precision.*", key="ops.py:*",
+                              reason="per-channel scale ABI")]
+        f = self._finding()
+        out = apply_allowlist([f], entries)
+        assert out[0].allowed and out[0].allow_reason
+        assert at_or_above(out, "error") == []
+        # non-matching key stays gating
+        other = apply_allowlist([self._finding(key="layers.py:mlp")], entries)
+        assert not other[0].allowed
+        assert len(at_or_above(other, "error")) == 1
+
+    def test_worst_severity_skips_allowed(self):
+        allowed = dataclasses.replace(self._finding(), allowed=True)
+        assert worst_severity([allowed]) is None
+        assert worst_severity([allowed], include_allowed=True) == "error"
+
+    def test_load_rejects_reasonless_entries(self, tmp_path):
+        p = tmp_path / "analyze.toml"
+        p.write_text('[[allow]]\nrule = "wire.*"\nkey = "*"\n')
+        with pytest.raises(ValueError, match="reason"):
+            load_allowlist(str(p))
+
+    def test_load_roundtrip(self, tmp_path):
+        p = tmp_path / "analyze.toml"
+        p.write_text('[[allow]]\nrule = "wire.*"\nkey = "train:*"\n'
+                     'reason = "because"\n')
+        entries = load_allowlist(str(p))
+        assert entries == [AllowEntry("wire.*", "train:*", "because")]
+        assert load_allowlist(str(tmp_path / "missing.toml")) == []
+
+    def test_repo_allowlist_parses(self):
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        entries = load_allowlist(os.path.join(repo, "analyze.toml"))
+        assert entries, "the checked-in analyze.toml must have entries"
+        assert all(e.reason for e in entries)
+
+
+# ---------------------------------------------------------------------------
+# Session.analyze end-to-end (trace-only: no XLA compile)
+# ---------------------------------------------------------------------------
+
+
+class TestSessionAnalyze:
+    @pytest.fixture(scope="class")
+    def serve_findings(self):
+        from repro.api.session import Session
+        from repro.api.spec import RunSpec
+
+        spec = RunSpec.from_dict({
+            "arch": "yi-6b", "workload": "serve", "mesh": "1x1",
+            "smoke": True, "batch": 2, "seq": 32,
+            "precision": {"weights": 7, "lazy": True}})
+        return Session(spec).analyze(compile=False)
+
+    def test_serve_path_has_no_unallowlisted_errors(self, serve_findings):
+        errors = at_or_above(serve_findings, "error")
+        assert errors == [], [f.format() for f in errors]
+
+    def test_packed_decode_keeps_fast_path(self, serve_findings):
+        # the seeded regression this suite guards: building the decode step
+        # without the session policy silently dequantizes every weight
+        assert all(f.rule != "precision.no_fastpath"
+                   for f in serve_findings)

@@ -18,7 +18,9 @@ Per-workload ``options`` keys:
 * ``dryrun`` — ``shape``, ``variant`` (gather_bf16 / capacity / no_remat),
   ``out``.
 * ``fl-sim`` — ``scheme``, ``n_clients``, ``lr``, ``error_tolerance``,
-  ``eval_every``, ``quiet``.
+  ``eval_every``, ``quiet``, ``faults`` (a ``FaultPlan`` dict: deterministic
+  fault injection + resilient rounds), ``resolve_drift_db``, ``ckpt_dir``,
+  ``ckpt_every``.
 
 The ``train`` workload runs federated rounds at the spec's FIXED
 :class:`PrecisionPolicy`; ``fl-orchestrate`` is the paper's full loop — every
@@ -156,7 +158,8 @@ class Session:
         return TrainConfig(
             learning_rate=float(self.spec.opt("lr", 0.05)),
             seed=self.spec.seed,
-            grad_compression_bits=self.policy.grad_compression_bits)
+            grad_compression_bits=self.policy.grad_compression_bits,
+            nonfinite_grads=str(self.spec.opt("nonfinite_grads", "raise")))
 
     def comm_report(self) -> dict:
         """Bytes-on-wire for one round's gradient reduction on this mesh.
@@ -251,16 +254,31 @@ class Session:
                 OrchestratorConfig(n_devices=n_clients, n_rounds=spec.rounds,
                                    scheme=spec.opt("scheme", "fwq"),
                                    model_dim_d=n_params,
-                                   precision=self.policy, seed=spec.seed),
+                                   precision=self.policy, seed=spec.seed,
+                                   faults=spec.opt("faults"),
+                                   resolve_drift_db=float(
+                                       spec.opt("resolve_drift_db", 0.0))),
                 fleet, caps, grad_bytes=4.0 * n_params)
 
         step = ts.fn(self.model.train_batch_spec(B, spec.seq))
         start = 0
         if self.ckpt:
-            state, start, _ = self.ckpt.restore_or({"p": params, "o": opt_state})
+            expect = None
+            if orch is not None:
+                expect = {"faults": (orch.cfg.faults.to_dict()
+                                     if orch.cfg.faults is not None else None)}
+            state, start, _ = self.ckpt.restore_or({"p": params, "o": opt_state},
+                                                   expect_extra=expect)
             if start:
                 params, opt_state = state["p"], state["o"]
                 log.info("resumed at round %d", start)
+                if orch is not None:
+                    # replay the completed rounds' planning (seeded host
+                    # math): rebuilds the solver cadence, fault realizations
+                    # and energy log exactly as the uninterrupted run saw
+                    # them, so the resumed trajectory is bit-identical
+                    for r in range(start):
+                        orch.plan_round(r)
 
         self._train_state = dict(
             jax=jax, jnp=jnp, opt=opt, step=step, params=params,
@@ -307,10 +325,20 @@ class Session:
                "t_round_s": plan["t_round"] if plan else 0.0,
                "wall_s": round(time.time() - t0, 3),
                "cohort": int(plan["cohort"].sum()) if plan else n_clients}
+        if plan is not None and "retransmissions" in plan:
+            rec.update(retransmissions=plan["retransmissions"],
+                       retx_energy_j=plan["retx_energy_j"],
+                       undelivered=plan["undelivered"],
+                       dropped_midround=plan["dropped_midround"])
         st["history"].append(rec)
         if self.ckpt:
+            extra = {"round": r + 1}
+            orch = st["orch"]
+            if orch is not None:
+                extra["faults"] = (orch.cfg.faults.to_dict()
+                                   if orch.cfg.faults is not None else None)
             self.ckpt.maybe_save(r + 1, {"p": st["params"],
-                                         "o": st["opt_state"]})
+                                         "o": st["opt_state"]}, extra=extra)
         return rec
 
     def run_train(self) -> list[dict]:
@@ -364,7 +392,8 @@ class Session:
 
         from repro.core.quantization import default_exempt
         from repro.launch.paging import (SlotPager, kv_cache_bytes,
-                                         pages_for, set_page_tables)
+                                         pages_for, plan_admissions,
+                                         set_page_tables)
         from repro.launch.steps import (
             build_cached_prefill, build_decode_step, init_global_caches)
         from repro.models.common import pack_params_for_policy
@@ -550,21 +579,42 @@ class Session:
         capacity_stops = 0
         deferred_ids: set = set()   # requests that waited at least once
 
+        def req_cap(req):
+            return min(req["prompt_len"] + req["max_new"], s_max)
+
         def admit():
             nonlocal caches, cur_tok, admitted
             free = [i for i in range(batch) if not active[i]]
             fill = []
-            while free and queue:
-                req = queue[0]
-                slot = free[0]
-                if pager is not None:
-                    tokens_cap = min(req["prompt_len"] + req["max_new"], s_max)
-                    if not pager.admit(slot, tokens_cap):
-                        # pool exhausted: wait for reclaim (counted once per
-                        # request, however many retries it takes)
-                        deferred_ids.add(req["id"])
-                        break
-                fill.append((free.pop(0), queue.pop(0)))
+            if pager is None:
+                while free and queue:
+                    fill.append((free.pop(0), queue.pop(0)))
+            else:
+                # FIFO with cascading reservation (plan_admissions): younger
+                # requests may fill slots out of the page surplus, but every
+                # freed page accrues to the oldest page-blocked request
+                # first, so a big request is never starved by small ones
+                demands = [pager.pages_for(req_cap(r)) for r in queue]
+                take, blocked = plan_admissions(pager.pool.free_pages,
+                                                len(free), demands)
+                for qi in blocked:
+                    if demands[qi] > pager.pool.n_pages:
+                        raise ValueError(
+                            f"page pool ({pager.pool.n_pages} pages) can "
+                            f"never fit a {demands[qi]}-page request; raise "
+                            "pool_pages")
+                    # waited at least once for page reclaim (counted once
+                    # per request, however many cycles it waits)
+                    deferred_ids.add(queue[qi]["id"])
+                for qi in take:
+                    req = queue[qi]
+                    slot = free.pop(0)
+                    if not pager.admit(slot, req_cap(req)):
+                        raise RuntimeError(
+                            "admission plan out of sync with page pool")
+                    fill.append((slot, req))
+                for qi in sorted(take, reverse=True):
+                    queue.pop(qi)
             if not fill:
                 return
             if pager is not None:
@@ -915,7 +965,11 @@ class Session:
                 scheme=o.get("scheme", "fwq"),
                 model_dim_d=int(o.get("model_dim_d", 1 << 16)),
                 error_tolerance=float(o.get("error_tolerance", 4.5)),
-                precision=self.policy, seed=seed),
+                precision=self.policy, seed=seed,
+                faults=o.get("faults"),
+                resolve_drift_db=float(o.get("resolve_drift_db", 0.0)),
+                ckpt_dir=str(o.get("ckpt_dir", "")),
+                ckpt_every=int(o.get("ckpt_every", 10))),
             fleet, caps, grad_bytes=float(o.get("grad_bytes", 1e6)))
 
         def batch_fn(r, cohort):

@@ -151,10 +151,24 @@ class CheckpointManager:
                                    extra=extra, keep=self.keep)
         return None
 
-    def restore_or(self, template: Any, default_extra: dict | None = None):
-        """(state, step, extra) from the latest checkpoint, or the template."""
+    def restore_or(self, template: Any, default_extra: dict | None = None,
+                   *, expect_extra: dict | None = None):
+        """(state, step, extra) from the latest checkpoint, or the template.
+
+        ``expect_extra``: keys that must match the saved manifest's extra
+        (when present there) — e.g. the fault plan a resumable FL run was
+        started with.  A mismatch raises instead of silently splicing two
+        different trajectories into one "resumed" run.
+        """
         step = latest_step(self.directory)
         if step is None:
             return template, 0, dict(default_extra or {})
         state, manifest = load_checkpoint(self.directory, template, step=step)
-        return state, manifest["step"], manifest.get("extra", {})
+        extra = manifest.get("extra", {})
+        for k, v in (expect_extra or {}).items():
+            if k in extra and extra[k] != v:
+                raise ValueError(
+                    f"checkpoint in {self.directory} was written with "
+                    f"{k}={extra[k]!r} but this run expects {k}={v!r}; "
+                    "refusing to resume a different trajectory")
+        return state, manifest["step"], extra

@@ -170,3 +170,5 @@ class TrainConfig:
     n_clients: int = 16
     error_tolerance: float = 0.05      # lambda in constraint (23)
     grad_compression_bits: int = 0     # 0 = off (paper-faithful)
+    nonfinite_grads: str = "raise"     # wire-quantizer NaN/Inf policy:
+    #                                    "raise" | "saturate"

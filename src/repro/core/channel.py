@@ -61,3 +61,15 @@ class ChannelModel:
 
     def group_of(self) -> np.ndarray:
         return np.arange(self.n_devices) % self.n_groups
+
+
+def gain_drift_db(ref_gains: np.ndarray, gains: np.ndarray) -> float:
+    """Mean absolute per-device gain drift between two realizations, in dB.
+
+    The orchestrator compares the gains its current strategy was solved
+    against with this round's *measured* (possibly fault-faded) gains; a
+    drift past ``resolve_drift_db`` triggers a warm-started GBD re-solve.
+    """
+    ref = np.maximum(np.asarray(ref_gains, dtype=np.float64), 1e-300)
+    cur = np.maximum(np.asarray(gains, dtype=np.float64), 1e-300)
+    return float(np.mean(np.abs(10.0 * np.log10(cur / ref))))

@@ -159,6 +159,21 @@ def comm_energy_j(bandwidth_hz, gain, p_comm_w, comm: CommParams) -> np.ndarray:
     return np.asarray(p_comm_w) * comm_time_s(bandwidth_hz, gain, p_comm_w, comm)
 
 
+def reference_rate_bps(bandwidth_hz, gain, p_comm_w, comm: CommParams) -> np.ndarray:
+    """Rate under the alpha-reformulation convention (sigma^2 at B_max).
+
+    One lossless pass over ``D_g`` at this rate costs exactly
+    ``T = alpha2/B`` and ``E = alpha1/B`` — the optimizer's plan.  The
+    retransmission executor (:mod:`repro.faults.executor`) bills every
+    transmission attempt at this rate, so a fault-free run reproduces the
+    planned comm energy to the bit and every retry shows up as a measured
+    surcharge on top of it.
+    """
+    sigma2 = comm.noise_power(comm.b_max_hz)
+    b = np.asarray(bandwidth_hz, dtype=np.float64)
+    return b * np.log1p(np.asarray(gain) * np.asarray(p_comm_w) / sigma2)
+
+
 def alpha_coefficients(
     gains: np.ndarray, p_comm_w: np.ndarray, comm: CommParams
 ) -> tuple[np.ndarray, np.ndarray]:

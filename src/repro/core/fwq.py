@@ -128,6 +128,62 @@ def make_fwq_round(
     return round_fn
 
 
+def make_fwq_client_grads(client_loss_fn: ClientLossFn):
+    """Phase 1 of a *gated* round: per-client losses/grads, no aggregation.
+
+    The resilient executor (fault injection + aggregation gate) needs the
+    per-client updates on the host before the server step; pairing this with
+    :func:`make_fwq_apply` splits :func:`make_fwq_round` at exactly the
+    uplink boundary of Algorithm 1 (between lines 6 and 10).
+    """
+
+    def grads_fn(params, batch, delta, rng):
+        n = delta.shape[0]
+        client_keys = jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(n))
+
+        def client_grad(params, batch_i, delta_i, rng_i):
+            (loss, _aux), grads = jax.value_and_grad(
+                lambda p: client_loss_fn(p, batch_i, delta_i, rng_i), has_aux=True
+            )(params)
+            gsq = sum(jnp.vdot(g, g).real for g in jax.tree_util.tree_leaves(grads))
+            finite = jnp.stack([jnp.all(jnp.isfinite(g))
+                                for g in jax.tree_util.tree_leaves(grads)]).all()
+            return loss, grads, gsq, finite
+
+        return jax.vmap(client_grad, in_axes=(None, 0, 0, 0))(
+            params, batch, delta, client_keys)
+
+    return grads_fn
+
+
+def make_fwq_apply(opt_update: Callable):
+    """Phase 2 of a gated round: masked aggregation + server step.
+
+    ``accept`` is an (n_clients,) 0/1 mask from the aggregation gate;
+    rejected clients are excluded via ``where`` *before* the sum (a NaN
+    times zero is still NaN) and survivors are reweighted by 1/n_accepted —
+    the unbiased mean over the cohort that actually delivered valid updates.
+    """
+
+    def apply_fn(params, opt_state, grads, accept):
+        w = accept.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(w), 1.0)
+
+        def agg(g):
+            gf = g.astype(jnp.float32)
+            mask = w.reshape((-1,) + (1,) * (gf.ndim - 1))
+            return jnp.sum(jnp.where(mask > 0, gf, 0.0), axis=0) / denom
+
+        G = jax.tree_util.tree_map(agg, grads)
+        updates, opt_state = opt_update(G, opt_state, params)
+        params = jax.tree_util.tree_map(
+            lambda p, u: (p + u).astype(p.dtype), params, updates)
+        gnorm = sum(jnp.vdot(g, g).real for g in jax.tree_util.tree_leaves(G))
+        return params, opt_state, gnorm
+
+    return apply_fn
+
+
 def delta_for_clients(
     bits,
     *,

@@ -57,9 +57,16 @@ def run_gbd(
     rel_eps: float = 1e-4,
     max_rounds: int = 50,
     use_milp: bool = True,
+    q0: np.ndarray | None = None,
     on_iteration: Callable[[dict], None] | None = None,
 ) -> GBDResult:
-    """Algorithm 2.  ``eps``/``rel_eps``: absolute/relative UB-LB stopping gap."""
+    """Algorithm 2.  ``eps``/``rel_eps``: absolute/relative UB-LB stopping gap.
+
+    ``q0`` warm-starts the decomposition from an incumbent bit assignment
+    (e.g. the previous strategy when re-solving after channel drift): the
+    first primal solve evaluates ``q0`` instead of the conservative max-bits
+    seed, so a still-good incumbent converges in one or two cuts.
+    """
     cuts: list[Cut] = []
     ub = np.inf
     lb = -np.inf
@@ -71,6 +78,23 @@ def run_gbd(
     allowed = spec.allowed()
     bits = np.asarray(spec.bits_options)
     q = np.array([bits[np.flatnonzero(allowed[i])[-1]] for i in range(spec.n_devices)])
+    if q0 is not None:
+        q0 = np.asarray(q0)
+        if q0.shape != (spec.n_devices,):
+            raise ValueError(f"q0 must have shape ({spec.n_devices},), "
+                             f"got {q0.shape}")
+        # project the incumbent onto each device's memory-feasible lattice,
+        # then accept it only if it also respects the error budget — the
+        # master never proposes budget-violating points, so neither may the
+        # warm seed (its primal value would be an invalid upper bound)
+        qw = np.empty_like(q)
+        ix = np.empty(spec.n_devices, dtype=int)
+        for i in range(spec.n_devices):
+            opts = np.flatnonzero(allowed[i])
+            ix[i] = opts[np.argmin(np.abs(bits[opts] - q0[i]))]
+            qw[i] = bits[ix[i]]
+        if float(np.sum(spec.delta_sq()[ix])) <= spec.error_budget:
+            q = qw
 
     z = 0
     converged = False

@@ -35,6 +35,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import _jax_compat
 from repro.core.quantization import FULL_PRECISION_BITS, _sr_round
@@ -172,7 +173,48 @@ def wire_dtype(bits: int, n_clients: int):
         "safe below 32768 clients) or use 32 (uncompressed)")
 
 
-def quantized_psum_batch(axes: AxisCtx, grad, rng, bits):
+def _nonfinite_guard(gf, on_nonfinite: str, ax=()):
+    """Keep NaN/Inf gradients out of the wire quantizer.
+
+    A non-finite leaf would poison the shared scale (``pmax`` of Inf/NaN)
+    and quantize every client's codes into garbage *silently*.  ``"raise"``
+    surfaces it as a runtime error via a host callback whose result is tied
+    into the dataflow (so DCE cannot drop the check); ``"saturate"`` maps
+    NaN to 0 and clamps ±Inf to the client's largest finite magnitude.
+
+    ``ax`` names the batch axes when called inside a collective: the bad
+    count is psum'd over them first so every shard reaches the same
+    verdict.  Without this the clean shards enter the scale ``pmax`` while
+    the poisoned shards raise in the callback, and the all-reduce
+    rendezvous deadlocks waiting for participants that will never arrive.
+    """
+    if on_nonfinite == "raise":
+        bad = jnp.sum(jnp.where(jnp.isfinite(gf), 0, 1))
+        if ax:
+            bad = jax.lax.psum(bad, tuple(ax))
+
+        def _host_check(nbad):
+            if int(nbad):
+                raise FloatingPointError(
+                    f"quantized_psum_batch: {int(nbad)} non-finite gradient "
+                    "values reached the wire quantizer (pass "
+                    "on_nonfinite='saturate' to clamp instead)")
+            return np.int32(0)
+
+        token = jax.pure_callback(
+            _host_check, jax.ShapeDtypeStruct((), jnp.int32), bad)
+        # fold the (always-zero) token into the values so the callback is a
+        # real dependency of the result, not dead code
+        return gf + token.astype(jnp.float32)
+    if on_nonfinite == "saturate":
+        fmax = jnp.max(jnp.where(jnp.isfinite(gf), jnp.abs(gf), 0.0))
+        return jnp.clip(jnp.where(jnp.isnan(gf), 0.0, gf), -fmax, fmax)
+    raise ValueError(f"on_nonfinite must be 'raise' or 'saturate', "
+                     f"got {on_nonfinite!r}")
+
+
+def quantized_psum_batch(axes: AxisCtx, grad, rng, bits, *,
+                         on_nonfinite: str = "raise"):
     """SR-quantized all-reduce **mean** of ``grad`` over the batch axes.
 
     Drop-in replacement for ``lax.pmean(grad, batch_axes)`` that moves
@@ -189,6 +231,10 @@ def quantized_psum_batch(axes: AxisCtx, grad, rng, bits):
 
     ``bits >= 32`` bypasses quantization (exact ``pmean``); a 1-group
     context is a no-op.  Returns E[out] == pmean(grad) for every bit-width.
+
+    ``on_nonfinite`` guards the quantizer against NaN/Inf inputs (see
+    :func:`_nonfinite_guard`): ``"raise"`` (default) fails loudly at
+    runtime, ``"saturate"`` clamps and continues.
     """
     n = axes.dp
     if n == 1:
@@ -197,7 +243,7 @@ def quantized_psum_batch(axes: AxisCtx, grad, rng, bits):
     if int(bits) >= FULL_PRECISION_BITS:
         return jax.lax.pmean(grad, ax)    # full precision: exact mean
 
-    gf = grad.astype(jnp.float32)
+    gf = _nonfinite_guard(grad.astype(jnp.float32), on_nonfinite, ax)
     s = jax.lax.pmax(jnp.max(jnp.abs(gf)), ax)
     s = jnp.where(s > 0, s, 1.0)
     lim = 2.0 ** int(bits) - 1.0

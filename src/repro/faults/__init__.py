@@ -1,0 +1,21 @@
+"""Deterministic fault injection + resilient round execution for FL runs."""
+
+from repro.faults.executor import (
+    TransmissionOutcome,
+    UpdateFaults,
+    gate_mask,
+    inject_corruption,
+    transmit_update,
+)
+from repro.faults.plan import FaultPlan, FaultSchedule, RoundFaults
+
+__all__ = [
+    "FaultPlan",
+    "FaultSchedule",
+    "RoundFaults",
+    "TransmissionOutcome",
+    "UpdateFaults",
+    "gate_mask",
+    "inject_corruption",
+    "transmit_update",
+]

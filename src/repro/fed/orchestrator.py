@@ -30,12 +30,18 @@ import numpy as np
 from repro.api.precision import PrecisionPolicy
 from repro.ckpt import CheckpointManager
 from repro.core import baselines as baselines_mod
-from repro.core.channel import ChannelModel
+from repro.core.channel import ChannelModel, gain_drift_db
 from repro.core.convergence import error_budget_bound
-from repro.core.energy import CommParams, DeviceProfile, alpha_coefficients
+from repro.core.energy import (
+    CommParams,
+    DeviceProfile,
+    alpha_coefficients,
+    reference_rate_bps,
+)
 from repro.core.gbd import run_gbd
 from repro.core.master import MasterSpec
 from repro.core.primal import PrimalData
+from repro.faults import FaultPlan, UpdateFaults, transmit_update
 
 log = logging.getLogger(__name__)
 
@@ -61,8 +67,13 @@ class OrchestratorConfig:
     seed: int = 0
     ckpt_dir: str = ""
     ckpt_every: int = 25
+    faults: FaultPlan | dict | None = None  # seeded fault injection plan
+    resolve_drift_db: float = 0.0    # warm re-solve when measured gains drift
+    #                                  past this (dB, 0 => disabled)
 
     def __post_init__(self):
+        if isinstance(self.faults, dict):
+            self.faults = FaultPlan.from_dict(self.faults)
         if self.bits_options is not None:
             warnings.warn(
                 "OrchestratorConfig(bits_options=...) is deprecated; pass "
@@ -106,11 +117,20 @@ class FLOrchestrator:
         self.energy_log: list[dict] = []
         self.ckpt = (CheckpointManager(cfg.ckpt_dir, every=cfg.ckpt_every)
                      if cfg.ckpt_dir else None)
+        self.faults = (cfg.faults.schedule(cfg.seed, cfg.n_devices)
+                       if cfg.faults is not None and cfg.faults.active
+                       else None)
 
     # ------------------------------------------------------------------
-    def _primal_data(self, round_idx: int) -> PrimalData:
+    def _primal_data(self, round_idx: int,
+                     gains0: np.ndarray | None = None) -> PrimalData:
         gains = np.stack([self.channel.gains(round_idx + h)
                           for h in range(self.cfg.horizon)])
+        if gains0 is not None:
+            # re-solve against the *measured* (fault-faded) current gains;
+            # future-horizon rounds keep the nominal channel prediction
+            gains = gains.copy()
+            gains[0] = gains0
         a1 = np.zeros_like(gains)
         a2 = np.zeros_like(gains)
         for r in range(self.cfg.horizon):
@@ -125,12 +145,20 @@ class FLOrchestrator:
                           beta2=self._beta2, p_comp=self._p_comp,
                           b_max=self.cfg.b_max_hz, t_max=t_max)
 
-    def resolve(self, round_idx: int) -> dict:
-        """(Re-)run the co-design and cache the strategy."""
-        data = self._primal_data(round_idx)
+    def resolve(self, round_idx: int, *, warm: bool = False,
+                gains0: np.ndarray | None = None) -> dict:
+        """(Re-)run the co-design and cache the strategy.
+
+        ``warm=True`` seeds the GBD from the incumbent strategy's q — used
+        for drift-triggered mid-cadence re-solves, where the previous
+        assignment is usually near-optimal for the perturbed channel.
+        """
+        data = self._primal_data(round_idx, gains0)
         scheme = self.cfg.scheme
         if scheme == "fwq":
-            res = run_gbd(data, self.spec, max_rounds=30)
+            q0 = (self._strategy["q"] if warm and self._strategy is not None
+                  else None)
+            res = run_gbd(data, self.spec, max_rounds=30, q0=q0)
         elif scheme == "full_precision":
             res = baselines_mod.full_precision(data, self.spec)
         elif scheme == "unified_q":
@@ -150,7 +178,10 @@ class FLOrchestrator:
                           "q": policy.bits_vector(self.cfg.n_devices),
                           "bandwidth": res.bandwidth,
                           "t_rounds": res.t_rounds, "energy_plan": res.energy,
-                          "resolved_at": round_idx}
+                          "resolved_at": round_idx,
+                          "gains0": (gains0 if gains0 is not None
+                                     else self.channel.gains(round_idx)),
+                          "warm": bool(warm)}
         return self._strategy
 
     # ------------------------------------------------------------------
@@ -158,22 +189,41 @@ class FLOrchestrator:
         """Strategy + cohort survival for this round.
 
         Returns dict with q (bits), surviving cohort mask, per-device energy
-        and the round latency (Eq. 26 bookkeeping).
+        and the round latency (Eq. 26 bookkeeping).  With a fault plan
+        active the round is *executed* against the realized faults: faded
+        gains, throttled compute, and a per-client retransmission loop whose
+        every attempt is billed real transmit energy.
         """
+        rf = (self.faults.round_faults(round_idx)
+              if self.faults is not None else None)
+        gains = self.channel.gains(round_idx)
+        eff_gains = gains * rf.fade_lin if rf is not None else gains
+
+        drift = 0.0
+        resolved = False
         if (self._strategy is None
                 or round_idx - self._strategy["resolved_at"] >= self.cfg.resolve_every):
-            self.resolve(round_idx)
+            # cadence re-solve: cold start, nominal gains (legacy behavior)
+            self.resolve(round_idx,
+                         gains0=eff_gains if rf is not None else None)
+            resolved = True
+        elif self.cfg.resolve_drift_db > 0:
+            drift = gain_drift_db(self._strategy["gains0"], eff_gains)
+            if drift > self.cfg.resolve_drift_db:
+                self.resolve(round_idx, warm=True, gains0=eff_gains)
+                resolved = True
         st = self._strategy
         q = st["q"]
         h = self._strategy["resolved_at"]
         B = st["bandwidth"][min(round_idx - h, st["bandwidth"].shape[0] - 1)]
-        gains = self.channel.gains(round_idx)
-        a1, a2 = alpha_coefficients(gains, self._p_comm, self.comm)
+        a1, a2 = alpha_coefficients(eff_gains, self._p_comm, self.comm)
 
         t_comp = self._beta1 + self._beta2 * q
+        if rf is not None:
+            t_comp = t_comp * rf.slow
         t_comm = a2 / B
         e_comp = self._p_comp * t_comp
-        e_comm = a1 / B
+        e_comm = a1 / B            # lossless planned optimum
         t_total = t_comp + t_comm
 
         planned = st["t_rounds"][min(round_idx - h, len(st["t_rounds"]) - 1)]
@@ -181,33 +231,118 @@ class FLOrchestrator:
         rng = np.random.default_rng((self.cfg.seed, round_idx, 77))
         alive = rng.random(self.cfg.n_devices) >= self.cfg.dropout_prob
         on_time = t_total <= deadline
-        cohort = alive & on_time
-        if not cohort.any():        # never lose the round entirely
-            cohort = alive if alive.any() else np.ones_like(alive)
 
-        rec = {
+        if rf is None:
+            cohort = alive & on_time
+            if not cohort.any():        # never lose the round entirely
+                cohort = alive if alive.any() else np.ones_like(alive)
+            rec = {
+                "round": round_idx, "policy": st["policy"],
+                "q": q.copy(), "bandwidth": B.copy(),
+                "t_comp": t_comp, "t_comm": t_comm,
+                "t_round": float(np.max(np.where(cohort, t_total, 0.0))),
+                "e_comp": e_comp, "e_comm": e_comm,
+                "energy_round": float(np.sum(np.where(cohort, e_comp + e_comm, 0.0))),
+                "cohort": cohort, "n_stragglers": int((~on_time).sum()),
+                "n_failed": int((~alive).sum()),
+            }
+        else:
+            rec = self._execute_faulty_round(
+                round_idx, rf, st, q, B, eff_gains, alive, deadline,
+                t_comp, t_comm, e_comp, e_comm, drift, resolved)
+        self.energy_log.append(rec)
+        return rec
+
+    def _execute_faulty_round(self, round_idx, rf, st, q, B, eff_gains,
+                              alive, deadline, t_comp, t_comm, e_comp,
+                              e_comm, drift, resolved) -> dict:
+        """Realize one round under faults: who delivers, and at what cost.
+
+        Energy semantics: every *alive* client computes (mid-round dropout
+        happens after local training), and every client that attempts the
+        uplink pays for each transmission attempt — delivered or not.
+        ``e_comm`` stays the lossless plan; ``e_comm_actual`` is the bill.
+        """
+        n = self.cfg.n_devices
+        plan = self.faults.plan
+        payload_bits = 8.0 * self.comm.grad_bytes
+        rate = reference_rate_bps(B, eff_gains, self._p_comm, self.comm)
+
+        delivered = np.zeros(n, dtype=bool)
+        e_comm_act = np.zeros(n)
+        t_comm_act = np.zeros(n)
+        attempts = np.zeros(n, dtype=int)
+        retx = np.zeros(n, dtype=int)
+        e_retx = np.zeros(n)
+        uploads = alive & ~rf.drop
+        for i in np.flatnonzero(uploads):
+            out = transmit_update(
+                payload_bits, float(rate[i]), float(self._p_comm[i]),
+                rf.loss_prob, self.faults.chunk_rng(round_idx, i), plan,
+                budget_s=max(0.0, deadline - float(t_comp[i])))
+            delivered[i] = out.delivered
+            e_comm_act[i] = out.e_comm_j
+            t_comm_act[i] = out.t_comm_s
+            attempts[i] = out.attempts
+            retx[i] = out.retransmissions
+            e_retx[i] = out.e_retx_j
+
+        cohort = delivered
+        forced = False
+        if not cohort.any():
+            # nobody made the deadline: rather than lose the round, extend
+            # it for the best-effort cohort (energy already billed above)
+            forced = True
+            cohort = (uploads if uploads.any()
+                      else (alive if alive.any() else np.ones(n, dtype=bool)))
+
+        t_active = np.where(cohort, t_comp + t_comm_act, 0.0)
+        # alive clients all burn compute (dropout strikes after training);
+        # uplink attempts are billed whether or not they delivered
+        billed = float(np.sum(np.where(alive, e_comp, 0.0)) + e_comm_act.sum())
+        return {
             "round": round_idx, "policy": st["policy"],
             "q": q.copy(), "bandwidth": B.copy(),
             "t_comp": t_comp, "t_comm": t_comm,
-            "t_round": float(np.max(np.where(cohort, t_total, 0.0))),
+            "t_round": float(np.max(t_active)) if t_active.size else 0.0,
             "e_comp": e_comp, "e_comm": e_comm,
-            "energy_round": float(np.sum(np.where(cohort, e_comp + e_comm, 0.0))),
-            "cohort": cohort, "n_stragglers": int((~on_time).sum()),
+            "e_comm_actual": e_comm_act,
+            "energy_round": billed,
+            "cohort": cohort,
+            "n_stragglers": int((uploads & ~delivered).sum()),
             "n_failed": int((~alive).sum()),
+            "dropped_midround": int((alive & rf.drop).sum()),
+            "undelivered": int((uploads & ~delivered).sum()),
+            "attempts": int(attempts.sum()),
+            "retransmissions": int(retx.sum()),
+            "retx_energy_j": float(e_retx.sum()),
+            "corrupt_kind": rf.corrupt_kind.copy(),
+            "fade_db": rf.fade_db.copy(),
+            "drift_db": float(drift),
+            "resolved": bool(resolved),
+            "warm_resolve": bool(st.get("warm", False)),
+            "forced_cohort": forced,
         }
-        self.energy_log.append(rec)
-        return rec
 
     # ------------------------------------------------------------------
     def run(self, sim, batch_fn: Callable[[int, np.ndarray], dict],
             *, eval_fn: Callable | None = None, eval_every: int = 0) -> dict:
         """Drive ``sim`` (FLSimulation) for n_rounds with full bookkeeping."""
         start = 0
+        plan_dict = (self.faults.plan.to_dict()
+                     if self.faults is not None else None)
         if self.ckpt is not None:
-            state, start, _ = self.ckpt.restore_or(sim.state())
+            state, start, _ = self.ckpt.restore_or(
+                sim.state(), expect_extra={"faults": plan_dict})
             if start:
                 sim.load_state(state, start)
                 log.info("resumed from round %d", start)
+                # replay planning for the completed rounds: pure host math
+                # (seeded solver cadence, fault realizations, energy log) so
+                # the resumed run's strategy state and bookkeeping are
+                # bit-identical to the uninterrupted run's at round `start`
+                for r in range(start):
+                    self.plan_round(r)
         evals = []
         for r in range(start, self.cfg.n_rounds):
             plan = self.plan_round(r)
@@ -216,16 +351,43 @@ class FLOrchestrator:
             # per-device bits reach the simulator only through the round's
             # PrecisionPolicy (built by PrecisionPolicy.from_gbd in resolve)
             bits = plan["policy"].bits_vector(self.cfg.n_devices)[cohort_idx]
+            upd = None
+            if self.faults is not None:
+                upd = UpdateFaults(
+                    kinds=plan["corrupt_kind"][cohort_idx],
+                    rngs=tuple(self.faults.corrupt_rng(r, int(i))
+                               for i in cohort_idx),
+                    gate_factor=self.faults.plan.gate_norm_factor)
             # elastic cohort: the simulator round is sized by the batch
-            rec = sim.run_round(batch, bits)
+            rec = sim.run_round(batch, bits, faults=upd)
             rec.update(energy=plan["energy_round"], t_round=plan["t_round"],
                        cohort_size=len(cohort_idx))
+            if upd is not None:
+                plan["n_rejected"] = rec.get("n_rejected", 0)
+                rec.update(retransmissions=plan["retransmissions"],
+                           retx_energy_j=plan["retx_energy_j"])
             if eval_fn is not None and eval_every and (r + 1) % eval_every == 0:
                 evals.append({"round": r, **eval_fn(sim)})
             if self.ckpt is not None:
-                self.ckpt.maybe_save(r + 1, sim.state(), extra={"round": r + 1})
+                self.ckpt.maybe_save(r + 1, sim.state(),
+                                     extra={"round": r + 1,
+                                            "faults": plan_dict})
         total_energy = float(sum(e["energy_round"] for e in self.energy_log))
         total_time = float(sum(e["t_round"] for e in self.energy_log))
-        return {"history": sim.history, "energy_log": self.energy_log,
-                "evals": evals, "total_energy_j": total_energy,
-                "total_time_s": total_time}
+        out = {"history": sim.history, "energy_log": self.energy_log,
+               "evals": evals, "total_energy_j": total_energy,
+               "total_time_s": total_time}
+        if self.faults is not None:
+            out.update(
+                total_retransmissions=int(sum(
+                    e.get("retransmissions", 0) for e in self.energy_log)),
+                total_retx_energy_j=float(sum(
+                    e.get("retx_energy_j", 0.0) for e in self.energy_log)),
+                total_rejected=int(sum(
+                    h.get("n_rejected", 0) for h in sim.history)),
+                total_undelivered=int(sum(
+                    e.get("undelivered", 0) for e in self.energy_log)),
+                total_dropped_midround=int(sum(
+                    e.get("dropped_midround", 0) for e in self.energy_log)),
+            )
+        return out

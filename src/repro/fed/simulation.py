@@ -14,7 +14,15 @@ from typing import Callable
 import jax
 import numpy as np
 
-from repro.core.fwq import FWQConfig, delta_for_clients, make_fwq_round, make_tree_quant_loss
+from repro.core.fwq import (
+    FWQConfig,
+    delta_for_clients,
+    make_fwq_apply,
+    make_fwq_client_grads,
+    make_fwq_round,
+    make_tree_quant_loss,
+)
+from repro.faults.executor import UpdateFaults, gate_mask, inject_corruption
 from repro.optim import Optimizer, build_optimizer
 
 
@@ -43,6 +51,8 @@ class FLSimulation:
         round_fn = make_fwq_round(client_loss, self.opt.update,
                                   FWQConfig(n_clients=cfg.n_clients))
         self._round = jax.jit(round_fn)
+        self._client_loss = client_loss
+        self._gated = None  # (grads_fn, apply_fn) — built on first fault use
         self.round_idx = 0
         self.history: list[dict] = []
 
@@ -53,10 +63,17 @@ class FLSimulation:
         self.params, self.opt_state = state["params"], state["opt"]
         self.round_idx = round_idx
 
-    def run_round(self, batch, bits) -> dict:
+    def run_round(self, batch, bits, *, faults: UpdateFaults | None = None) -> dict:
         """batch: leaves with leading dim n_clients; bits: (n_clients,) ints
         or a :class:`repro.api.precision.PrecisionPolicy` whose weights role
-        covers exactly this round's cohort."""
+        covers exactly this round's cohort.
+
+        ``faults`` (from the resilient orchestrator) switches to the gated
+        two-phase round: per-client grads -> host-side payload corruption ->
+        aggregation gate (finite check + relative norm bound) -> masked
+        server step.  ``faults=None`` is the legacy single-jit round,
+        bit-identical to before the gate existed.
+        """
         if hasattr(bits, "bits_vector"):  # PrecisionPolicy
             n = jax.tree_util.tree_leaves(batch)[0].shape[0]
             if bits.heterogeneous and len(bits.weights) != n:
@@ -70,18 +87,75 @@ class FLSimulation:
             bits = bits.bits_vector(n)
         delta = delta_for_clients(np.asarray(bits))
         rng = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), self.round_idx)
-        self.params, self.opt_state, m = self._round(
-            self.params, self.opt_state, batch, delta, rng)
-        rec = {
-            "round": self.round_idx,
-            "loss": float(m.loss),
-            "grad_norm_sq": float(m.grad_norm_sq),
-            "client_loss": np.asarray(m.client_loss),
-            "bits": np.asarray(bits).copy(),
-        }
+        if faults is None:
+            self.params, self.opt_state, m = self._round(
+                self.params, self.opt_state, batch, delta, rng)
+            rec = {
+                "round": self.round_idx,
+                "loss": float(m.loss),
+                "grad_norm_sq": float(m.grad_norm_sq),
+                "client_loss": np.asarray(m.client_loss),
+                "bits": np.asarray(bits).copy(),
+            }
+        else:
+            rec = self._run_gated_round(batch, delta, rng, bits, faults)
         self.history.append(rec)
         self.round_idx += 1
         return rec
+
+    def _run_gated_round(self, batch, delta, rng, bits,
+                         faults: UpdateFaults) -> dict:
+        if self._gated is None:
+            self._gated = (jax.jit(make_fwq_client_grads(self._client_loss)),
+                           jax.jit(make_fwq_apply(self.opt.update)))
+        grads_fn, apply_fn = self._gated
+        losses, grads, gsqs, finite = grads_fn(self.params, batch, delta, rng)
+        norms_sq = np.array(gsqs, dtype=np.float64)
+        finite = np.array(finite, dtype=bool)
+
+        kinds = np.asarray(faults.kinds)
+        if (kinds > 0).any():
+            # pull per-client updates to the host, damage the flagged ones in
+            # their flattened-payload view, and re-stage for aggregation
+            leaves = [np.array(g) for g in jax.tree_util.tree_leaves(grads)]
+            for ci in np.flatnonzero(kinds):
+                vec = np.concatenate([leaf[ci].ravel() for leaf in leaves])
+                vec = inject_corruption(vec, int(kinds[ci]), faults.rngs[ci])
+                off = 0
+                for leaf in leaves:
+                    size = leaf[ci].size
+                    leaf[ci] = vec[off:off + size].reshape(leaf[ci].shape)
+                    off += size
+                with np.errstate(over="ignore", invalid="ignore"):
+                    norms_sq[ci] = float(sum(
+                        np.sum(leaf[ci].astype(np.float64) ** 2)
+                        for leaf in leaves))
+                finite[ci] = all(np.isfinite(leaf[ci]).all() for leaf in leaves)
+            grads = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(grads), leaves)
+
+        accept = gate_mask(norms_sq, finite, faults.gate_factor)
+        n_rejected = int((~accept).sum())
+        if accept.any():
+            self.params, self.opt_state, gnorm = apply_fn(
+                self.params, self.opt_state, grads,
+                jax.numpy.asarray(accept.astype(np.float32)))
+            gnorm = float(gnorm)
+            skipped = False
+        else:
+            # every update rejected: hold the global model for this round
+            gnorm = 0.0
+            skipped = True
+        return {
+            "round": self.round_idx,
+            "loss": float(jax.numpy.mean(losses)),
+            "grad_norm_sq": gnorm,
+            "client_loss": np.asarray(losses),
+            "bits": np.asarray(bits).copy(),
+            "accepted": accept,
+            "n_rejected": n_rejected,
+            "gate_skipped": skipped,
+        }
 
     def evaluate(self, loss_fn, batch) -> dict:
         loss, aux = jax.jit(loss_fn)(self.params, batch, jax.random.PRNGKey(0))

@@ -26,17 +26,35 @@ def main(argv=None):
     ap.add_argument("--error-tolerance", type=float, default=4.5)
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", default="",
+                    help="JSON FaultPlan dict, e.g. "
+                    '\'{"packet_loss": 0.1, "dropout_prob": 0.05}\' — '
+                    "runs the resilient round executor")
+    ap.add_argument("--resolve-drift-db", type=float, default=0.0,
+                    help="warm GBD re-solve when measured gains drift past "
+                    "this many dB (0 = disabled)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="round-level checkpoints; rerunning with the same "
+                    "dir resumes bit-identically")
+    ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
     from repro.api import RunSpec, Session
 
+    options = {"scheme": args.scheme, "n_clients": args.clients,
+               "lr": args.lr, "error_tolerance": args.error_tolerance,
+               "eval_every": args.eval_every}
+    if args.faults:
+        options["faults"] = json.loads(args.faults)
+    if args.resolve_drift_db:
+        options["resolve_drift_db"] = args.resolve_drift_db
+    if args.ckpt_dir:
+        options["ckpt_dir"] = args.ckpt_dir
+        options["ckpt_every"] = args.ckpt_every
     spec = RunSpec(
         arch=args.model, workload="fl-sim", seed=args.seed,
-        batch=args.batch, rounds=args.rounds,
-        options={"scheme": args.scheme, "n_clients": args.clients,
-                 "lr": args.lr, "error_tolerance": args.error_tolerance,
-                 "eval_every": args.eval_every})
+        batch=args.batch, rounds=args.rounds, options=options)
     out = Session(spec).run()
 
     print(f"\n{'round':>5} {'loss':>8} {'energy(J)':>10} {'bits chosen':>16}")
@@ -45,12 +63,23 @@ def main(argv=None):
               f"{str(sorted(set(h['bits'].tolist()))):>16}")
     print(f"\ntotal energy: {out['total_energy_j']:.2f} J over "
           f"{out['total_time_s']:.1f} s (simulated wall time)")
+    if "total_retransmissions" in out:
+        print(f"faults: {out['total_retransmissions']} retransmissions "
+              f"({out['total_retx_energy_j']:.3f} J), "
+              f"{out['total_rejected']} rejected updates, "
+              f"{out['total_undelivered']} undelivered, "
+              f"{out['total_dropped_midround']} mid-round dropouts")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"total_energy_j": out["total_energy_j"],
                        "total_time_s": out["total_time_s"],
                        "losses": [h["loss"] for h in out["history"]],
-                       "evals": out["evals"]}, f, indent=1)
+                       "evals": out["evals"],
+                       **{k: out[k] for k in
+                          ("total_retransmissions", "total_retx_energy_j",
+                           "total_rejected", "total_undelivered",
+                           "total_dropped_midround") if k in out}},
+                      f, indent=1)
     return out
 
 

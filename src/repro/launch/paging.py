@@ -21,6 +21,41 @@ import dataclasses
 import numpy as np
 
 
+def plan_admissions(free_pages: int, free_slots: int,
+                    demands) -> tuple[list[int], list[int]]:
+    """FIFO admission plan with cascading reservations (starvation-free).
+
+    ``demands[i]`` is the page count request ``i`` needs, oldest first.
+    Returns ``(admit, blocked)`` — indices into ``demands``.  A blocked
+    older request *reserves* every page a younger request would otherwise
+    grab: request ``i`` may only draw from the surplus beyond the sum of all
+    older blocked requests' reservations (a page-blocked request reserves
+    every usable page, so in practice nothing leapfrogs it).  Freed pages
+    therefore accrue to the oldest waiter first, and a large request at the
+    queue head admits as soon as enough completions reclaim pages — a
+    stream of small younger requests can never starve it.
+
+    ``blocked`` lists only page-limited requests (considered while a slot
+    was still free); requests past the slot limit are neither admitted nor
+    blocked — they were never candidates this cycle.
+    """
+    admit: list[int] = []
+    blocked: list[int] = []
+    avail = int(free_pages)
+    reserved = 0
+    for i, need in enumerate(demands):
+        if len(admit) >= free_slots:
+            break
+        usable = avail - reserved
+        if int(need) <= usable:
+            admit.append(i)
+            avail -= int(need)
+        else:
+            blocked.append(i)
+            reserved += min(int(need), usable)
+    return admit, blocked
+
+
 def pages_for(cap_tokens: int, page_size: int) -> int:
     """Pages needed to cache ``cap_tokens`` tokens (ceil division) — the ONE
     place the rounding lives; the driver's pool sizing and the allocator

@@ -134,7 +134,8 @@ def build_train_step(model: Model, mesh, axes: AxisCtx, opt: Optimizer,
                 else:
                     out.append(quantized_psum_batch(
                         axes, g, jax.random.fold_in(paths_key, i),
-                        train_cfg.grad_compression_bits))
+                        train_cfg.grad_compression_bits,
+                        on_nonfinite=train_cfg.nonfinite_grads))
             grads = jax.tree_util.tree_unflatten(treedef, out)
         else:
             grads = reduce_gradients(grads, params, axes)

@@ -21,6 +21,9 @@ Named presets (:func:`get_preset`) cover the ROADMAP grids:
 * ``serve-precision-ablation`` — serve smokes over weight bits x kv-cache
   storage x KV layout (paged vs contiguous).
 * ``fl-codesign-grid``         — the paper's Fig. 2 scheme grid (fl-sim).
+* ``fl-fault-grid``            — fault intensity x {GBD co-design,
+  fixed-bit baseline} degradation grid through the resilient round
+  executor (``repro.faults``).
 * ``grad-comm-wire``           — train smokes over gradient wire bits
   (consumes :func:`repro.dist.wire.grad_wire_report`).
 * ``ci-tiny``                  — 2 dryrun cells + 1 fl-sim cell + 1
@@ -99,7 +102,9 @@ class Cell:
             return (f"{s.arch} w{s.precision.weights} "
                     f"kv{s.precision.kv_cache}")
         if s.workload == "fl-sim":
-            return f"{s.arch} {s.opt('scheme', 'fwq')}"
+            f = s.opt("faults") or {}
+            tag = f" faults[pl={f.get('packet_loss', 0):g}]" if f else ""
+            return f"{s.arch} {s.opt('scheme', 'fwq')}{tag}"
         return f"{s.arch} {s.workload} comm{s.precision.comm}"
 
 
@@ -207,6 +212,32 @@ def preset_fl_codesign_grid(rounds: int = 60, n_clients: int = 8,
                    ("fwq", "full_precision", "unified_q", "rand_q")),))
 
 
+def preset_fl_fault_grid(rounds: int = 24, n_clients: int = 6,
+                         arch: str = "resnet") -> Sweep:
+    """Degradation grid: fault intensity x co-design scheme (fl-sim).
+
+    Three fault levels (none / mild / severe) against the GBD co-design
+    (``fwq``) and the fixed-bit ``unified_q`` baseline.  Every cell runs the
+    resilient round executor (deadline + retransmission + aggregation gate),
+    with drift-triggered warm GBD re-solves enabled, so the table reads as
+    "how gracefully does each scheme degrade": loss/energy deltas plus the
+    explicit retransmission, rejected-update, and undelivered counters.
+    """
+    mild = {"dropout_prob": 0.05, "fade_prob": 0.1, "packet_loss": 0.05,
+            "corrupt_prob": 0.05}
+    severe = {"dropout_prob": 0.15, "fade_prob": 0.3, "packet_loss": 0.2,
+              "corrupt_prob": 0.1, "slowdown_prob": 0.1}
+    return Sweep(
+        name="fl-fault-grid",
+        base={"arch": arch, "workload": "fl-sim", "rounds": rounds,
+              "batch": 16,
+              "options": {"n_clients": n_clients, "lr": 0.2,
+                          "error_tolerance": 4.5, "eval_every": 8,
+                          "resolve_drift_db": 6.0}},
+        axes=(Axis("options.scheme", ("fwq", "unified_q")),
+              Axis("options.faults", (None, mild, severe))))
+
+
 def preset_grad_comm_wire(rounds: int = 2) -> Sweep:
     """Gradient wire-compression ablation: train smokes over comm bits.
 
@@ -247,13 +278,22 @@ def preset_ci_tiny() -> Sweep:
              "options": {"steps": 48, "s_max": 128, "prompt_len": 8,
                          "max_new": 10, "requests": 4, "kv_layout": "paged",
                          "page_size": 8, "pool_pages": 5,
-                         "vary_prompt": True, "quiet": True}},))
+                         "vary_prompt": True, "quiet": True}},
+            # fault-injected fl-sim: nonzero dropout + packet loss + corrupt
+            # through the resilient round executor — the CI contract is that
+            # it completes with zero unhandled exceptions and reports the
+            # retransmission / rejected-update counters
+            {"arch": "resnet", "workload": "fl-sim", "rounds": 3, "batch": 8,
+             "options": {"scheme": "fwq", "n_clients": 4, "lr": 0.1,
+                         "faults": {"dropout_prob": 0.2, "packet_loss": 0.15,
+                                    "corrupt_prob": 0.25}}},))
 
 
 PRESETS = {
     "roofline-all-archs": preset_roofline_all_archs,
     "serve-precision-ablation": preset_serve_precision_ablation,
     "fl-codesign-grid": preset_fl_codesign_grid,
+    "fl-fault-grid": preset_fl_fault_grid,
     "grad-comm-wire": preset_grad_comm_wire,
     "ci-tiny": preset_ci_tiny,
 }

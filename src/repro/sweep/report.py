@@ -101,12 +101,37 @@ def train_row(rec: dict) -> dict:
     }
 
 
+def fl_fault_row(rec: dict) -> dict:
+    s, m = rec["spec"], rec["metrics"]
+    faults = s["options"].get("faults") or {}
+    level = ("none" if not faults else
+             " ".join(f"{k.split('_')[0]}={v:g}"
+                      for k, v in sorted(faults.items())))
+    return {
+        "scheme": s["options"].get("scheme", "fwq"),
+        "faults": level,
+        "final loss": _f(m.get("final_loss"), "{:.4f}"),
+        "energy (J)": _f(m.get("total_energy_j"), "{:.2f}"),
+        "retx": str(m.get("retransmissions", 0)),
+        "retx (J)": _f(m.get("retx_energy_j"), "{:.3f}"),
+        "rejected": str(m.get("rejected_updates", 0)),
+        "undelivered": str(m.get("undelivered", 0)),
+        "dropped": str(m.get("dropped_midround", 0)),
+    }
+
+
 _ROW_ADAPTERS = {
     "dryrun": roofline_row,
     "serve": serving_row,
     "fl-sim": fl_row,
     "train": train_row,
     "fl-orchestrate": train_row,
+}
+
+#: Sweep-specific overrides: some grids want columns the generic workload
+#: adapter doesn't carry (the fault grid's resilience counters).
+_SWEEP_ROW_ADAPTERS = {
+    "fl-fault-grid": {"fl-sim": fl_fault_row},
 }
 
 
@@ -138,7 +163,8 @@ def render_tables(sweep: Sweep, store: ResultsStore) -> str:
             missing.append(f"{cell.label} "
                            f"({'pending' if rec is None else rec['status']})")
             continue
-        adapter = _ROW_ADAPTERS[cell.spec.workload]
+        adapter = (_SWEEP_ROW_ADAPTERS.get(sweep.name, {})
+                   .get(cell.spec.workload, _ROW_ADAPTERS[cell.spec.workload]))
         by_workload.setdefault(cell.spec.workload, []).append(adapter(rec))
     parts = [f"*Generated by `repro-sweep run {sweep.name}` — do not edit "
              f"between the markers.*"]

@@ -79,6 +79,12 @@ def execute_cell(spec: RunSpec) -> dict:
                        **{k: float(v) for k, v in e.items() if k != "round"}}
                       for e in evals],
             "bits_mix": sorted({int(b) for e in energy for b in e["q"]}),
+            # resilient-round accounting (0 when no fault plan was active)
+            "retransmissions": int(out.get("total_retransmissions", 0)),
+            "retx_energy_j": float(out.get("total_retx_energy_j", 0.0)),
+            "rejected_updates": int(out.get("total_rejected", 0)),
+            "undelivered": int(out.get("total_undelivered", 0)),
+            "dropped_midround": int(out.get("total_dropped_midround", 0)),
         }
     if wl == "serve":
         return dataclasses.asdict(sess.serve())
@@ -206,7 +212,15 @@ class SweepRunner:
             else:
                 status, metrics = "ok", execute_cell(cell.spec)
         except Exception as e:                      # noqa: BLE001
-            status, metrics = "error", {"error": f"{type(e).__name__}: {e}"}
+            # an in-process cell crash becomes an explicit failed row (with
+            # enough traceback to diagnose), never a dead grid: later cells
+            # still run, and a resumed sweep can deterministically skip or
+            # retry this key (rerun_failed)
+            import traceback
+
+            status = "error"
+            metrics = {"error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
         if isinstance(metrics, dict) and metrics.get("status") == "FAIL":
             status = "error"
         return {**base, "status": status, "metrics": metrics,
@@ -234,8 +248,12 @@ class SweepRunner:
             try:
                 proc = subprocess.run(cmd, env=env, capture_output=True,
                                       text=True, timeout=self.timeout_s)
-            except subprocess.TimeoutExpired:
-                return "timeout", {"timeout_s": self.timeout_s}
+            except subprocess.TimeoutExpired as e:
+                stderr = e.stderr or b""
+                if isinstance(stderr, bytes):
+                    stderr = stderr.decode(errors="replace")
+                return "timeout", {"timeout_s": self.timeout_s,
+                                   "stderr": stderr[-2000:]}
             if proc.returncode != 0 or not os.path.exists(out_path):
                 return "error", {"returncode": proc.returncode,
                                  "stderr": proc.stderr[-2000:]}

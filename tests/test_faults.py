@@ -1,0 +1,390 @@
+"""repro.faults tests: seeded schedule determinism, retransmission energy
+accounting, corruption + aggregation gate, warm GBD re-solve, resilient
+orchestrator rounds, and the bitwise kill-and-resume contract under faults.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.energy import heterogeneous_fleet, memory_capacities
+from repro.faults import (
+    FaultPlan,
+    FaultSchedule,
+    TransmissionOutcome,
+    UpdateFaults,
+    gate_mask,
+    inject_corruption,
+    transmit_update,
+)
+from repro.fed import FLOrchestrator, OrchestratorConfig
+
+from test_fed_integration import batch_fn_for, make_data, make_sim
+
+PLAN = FaultPlan(dropout_prob=0.15, fade_prob=0.2, packet_loss=0.1,
+                 slowdown_prob=0.1, corrupt_prob=0.2)
+
+
+def _orch(n=6, rounds=8, tmp="", **kw):
+    fleet = heterogeneous_fleet(n, seed=0, group_step_mhz=5.0)
+    caps = memory_capacities(n, lo_mb=2.0, hi_mb=8.0) * 1e6
+    cfg = OrchestratorConfig(n_devices=n, n_rounds=rounds,
+                             model_dim_d=1 << 16, ckpt_dir=tmp, **kw)
+    return FLOrchestrator(cfg, fleet, caps, grad_bytes=1e6)
+
+
+class TestFaultPlan:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FaultPlan(dropout_prob=1.5)
+        with pytest.raises(ValueError):
+            FaultPlan(packet_loss=1.0)       # can never deliver
+        with pytest.raises(ValueError):
+            FaultPlan(chunk_bytes=0)
+        with pytest.raises(ValueError):
+            FaultPlan(max_retries=-1)
+
+    def test_dict_roundtrip_rejects_unknown_keys(self):
+        p = FaultPlan(packet_loss=0.2, max_retries=2)
+        assert FaultPlan.from_dict(p.to_dict()) == p
+        with pytest.raises(ValueError):
+            FaultPlan.from_dict({"packet_los": 0.2})   # typo'd key
+
+    def test_active(self):
+        assert not FaultPlan().active
+        assert FaultPlan(packet_loss=0.01).active
+        assert FaultPlan(dropout_prob=0.01).active
+
+
+class TestScheduleDeterminism:
+    def test_same_seed_same_realizations(self):
+        a = FaultSchedule(plan=PLAN, seed=7, n_devices=6)
+        b = FaultSchedule(plan=PLAN, seed=7, n_devices=6)
+        for r in (0, 3, 11):
+            ra, rb = a.round_faults(r), b.round_faults(r)
+            np.testing.assert_array_equal(ra.drop, rb.drop)
+            np.testing.assert_array_equal(ra.fade_db, rb.fade_db)
+            np.testing.assert_array_equal(ra.slow, rb.slow)
+            np.testing.assert_array_equal(ra.corrupt_kind, rb.corrupt_kind)
+
+    def test_rounds_and_seeds_differ(self):
+        s = FaultSchedule(plan=PLAN, seed=7, n_devices=64)
+        other_round = s.round_faults(1)
+        other_seed = FaultSchedule(plan=PLAN, seed=8,
+                                   n_devices=64).round_faults(0)
+        base = s.round_faults(0)
+        assert not np.array_equal(base.drop, other_round.drop) \
+            or not np.array_equal(base.fade_db, other_round.fade_db)
+        assert not np.array_equal(base.drop, other_seed.drop) \
+            or not np.array_equal(base.fade_db, other_seed.fade_db)
+
+    def test_chunk_streams_are_per_client(self):
+        """Client 0 consuming extra draws (retries) must not perturb what
+        client 1's stream produces — the replay-stability property."""
+        s = FaultSchedule(plan=PLAN, seed=7, n_devices=2)
+        r0 = s.chunk_rng(0, 0)
+        _ = r0.random(1000)                 # client 0 retries a lot
+        want = np.random.default_rng((7, 0xC4A7, 0, 1)).random(8)
+        np.testing.assert_array_equal(s.chunk_rng(0, 1).random(8), want)
+
+    def test_round_faults_independent_of_call_order(self):
+        s = FaultSchedule(plan=PLAN, seed=7, n_devices=6)
+        forward = [s.round_faults(r).drop for r in range(4)]
+        backward = [s.round_faults(r).drop for r in reversed(range(4))]
+        for f, b in zip(forward, reversed(backward)):
+            np.testing.assert_array_equal(f, b)
+
+
+class TestTransmitUpdate:
+    PLAN = FaultPlan(packet_loss=0.3, chunk_bytes=1e3, max_retries=4,
+                     backoff_base_s=0.01)
+
+    def test_lossless_is_the_planned_optimum(self):
+        """Zero loss: exactly one attempt per chunk, energy == P * T."""
+        out = transmit_update(8e4, rate_bps=1e5, p_comm_w=0.5, loss_prob=0.0,
+                              rng=np.random.default_rng(0), plan=self.PLAN)
+        assert out.delivered
+        assert out.chunks == 10 and out.attempts == 10
+        assert out.retransmissions == 0 and out.e_retx_j == 0.0
+        assert out.t_comm_s == pytest.approx(8e4 / 1e5)
+        assert out.e_comm_j == pytest.approx(0.5 * 8e4 / 1e5)
+
+    def test_every_attempt_is_billed(self):
+        out = transmit_update(8e4, rate_bps=1e5, p_comm_w=0.5, loss_prob=0.3,
+                              rng=np.random.default_rng(1), plan=self.PLAN)
+        e_chunk = 0.5 * (8e4 / 10) / 1e5
+        assert out.attempts > out.chunks            # some retries happened
+        assert out.e_comm_j == pytest.approx(out.attempts * e_chunk)
+        assert out.e_retx_j == pytest.approx(out.retransmissions * e_chunk)
+        # backoff waits add latency beyond the on-air time, but no energy
+        assert out.t_comm_s > out.attempts * (8e4 / 10) / 1e5 - 1e-12
+
+    def test_deadline_abort_keeps_energy_spent(self):
+        out = transmit_update(8e4, rate_bps=1e5, p_comm_w=0.5, loss_prob=0.0,
+                              rng=np.random.default_rng(0), plan=self.PLAN,
+                              budget_s=0.3)         # fits 3 of 10 chunks
+        assert not out.delivered
+        assert out.attempts == 3
+        assert out.e_comm_j == pytest.approx(3 * 0.5 * (8e4 / 10) / 1e5)
+
+    def test_retry_exhaustion_fails_delivery(self):
+        plan = FaultPlan(packet_loss=0.9, chunk_bytes=1e3, max_retries=1)
+        out = transmit_update(1e3 * 8, rate_bps=1e5, p_comm_w=0.5,
+                              loss_prob=0.9, rng=np.random.default_rng(3),
+                              plan=plan)
+        assert not out.delivered and out.attempts <= 2
+        assert out.e_comm_j > 0                     # the waste stays billed
+
+    def test_zero_rate_cannot_deliver(self):
+        out = transmit_update(8e4, rate_bps=0.0, p_comm_w=0.5, loss_prob=0.0,
+                              rng=np.random.default_rng(0), plan=self.PLAN)
+        assert out == TransmissionOutcome(False, 0, 0, 0, 0.0, 0.0, 0.0)
+
+    def test_deterministic_given_rng_seed(self):
+        outs = [transmit_update(8e4, 1e5, 0.5, 0.3,
+                                np.random.default_rng((7, 0xC4A7, 0, 1)),
+                                self.PLAN) for _ in range(2)]
+        assert outs[0] == outs[1]
+
+
+class TestCorruptionAndGate:
+    def test_kind1_nan_kind2_norm_blowup(self):
+        flat = np.random.default_rng(0).normal(size=1000).astype(np.float32)
+        nan = inject_corruption(flat, 1, np.random.default_rng(1))
+        assert np.isnan(nan).sum() == 10            # ~1% of 1000
+        flip = inject_corruption(flat, 2, np.random.default_rng(1))
+        assert np.isfinite(flip).all()
+        assert np.linalg.norm(flip) > 1e6 * np.linalg.norm(flat)
+        assert inject_corruption(flat, 0, np.random.default_rng(1)) is flat
+
+    def test_corruption_deterministic(self):
+        flat = np.arange(100, dtype=np.float64)
+        a = inject_corruption(flat, 1, np.random.default_rng(5))
+        b = inject_corruption(flat, 1, np.random.default_rng(5))
+        np.testing.assert_array_equal(np.isnan(a), np.isnan(b))
+
+    def test_gate_accepts_clean_rejects_damaged(self):
+        norms_sq = np.array([1.0, 1.1, 0.9, 1e30, 4.0])
+        finite = np.array([True, True, True, True, False])
+        accept = gate_mask(norms_sq, finite, factor=50.0)
+        np.testing.assert_array_equal(accept,
+                                      [True, True, True, False, False])
+
+    def test_gate_no_finite_survivor_rejects_all(self):
+        accept = gate_mask(np.array([1.0, 2.0]), np.array([False, False]),
+                           factor=50.0)
+        assert not accept.any()
+
+    def test_gate_bound_is_relative(self):
+        """The bound self-calibrates: tiny late-training norms still pass."""
+        norms_sq = np.full(4, 1e-12)
+        accept = gate_mask(norms_sq, np.ones(4, dtype=bool), factor=50.0)
+        assert accept.all()
+
+
+class TestGatedSimulatorRound:
+    def test_corrupt_update_rejected_not_aggregated(self):
+        """A NaN-poisoned client must be gated out and the server update
+        must equal the update computed from the clean clients alone."""
+        bits = np.full(6, 32)
+        batch = batch_fn_for(make_data(seed=2))(0, np.arange(6))
+
+        sim_clean, *_ = make_sim(seed=2)
+        rec_drop = None
+        # reference: plain round on the same data with no faults
+        ref = sim_clean.run_round(batch, bits)
+        assert ref["loss"] == pytest.approx(ref["loss"])
+
+        sim, *_ = make_sim(seed=2)
+        kinds = np.array([0, 1, 0, 0, 2, 0])
+        upd = UpdateFaults(kinds=kinds,
+                           rngs=tuple(np.random.default_rng((9, i))
+                                      for i in range(6)),
+                           gate_factor=50.0)
+        rec_drop = sim.run_round(batch, bits, faults=upd)
+        assert rec_drop["n_rejected"] == 2
+        assert not rec_drop["gate_skipped"]
+        np.testing.assert_array_equal(rec_drop["accepted"],
+                                      [True, False, True, True, False, True])
+        # the aggregate stayed finite despite NaN/blown-up members
+        leaves = jax.tree_util.tree_leaves(sim.params)
+        assert all(np.isfinite(np.asarray(p)).all() for p in leaves)
+
+    def test_all_corrupt_skips_server_update(self):
+        sim, *_ = make_sim(seed=2)
+        before = [np.array(p) for p in jax.tree_util.tree_leaves(sim.params)]
+        batch = batch_fn_for(make_data(seed=2))(0, np.arange(6))
+        upd = UpdateFaults(kinds=np.ones(6, dtype=int),
+                           rngs=tuple(np.random.default_rng((9, i))
+                                      for i in range(6)))
+        rec = sim.run_round(batch, np.full(6, 32), faults=upd)
+        assert rec["gate_skipped"] and rec["n_rejected"] == 6
+        after = jax.tree_util.tree_leaves(sim.params)
+        for b, a in zip(before, after):
+            np.testing.assert_array_equal(b, np.asarray(a))
+
+    def test_no_faults_path_matches_legacy(self):
+        """faults=None and an all-clean UpdateFaults must not disturb the
+        legacy (ungated) round's result."""
+        recs = {}
+        for name, faults in (
+                ("legacy", None),
+                ("clean", UpdateFaults(
+                    kinds=np.zeros(6, dtype=int),
+                    rngs=tuple(np.random.default_rng(i) for i in range(6))))):
+            sim, *_ = make_sim(seed=4)
+            batch = batch_fn_for(make_data(seed=4))(0, np.arange(6))
+            recs[name] = sim.run_round(batch, np.full(6, 8), faults=faults)
+        assert recs["legacy"]["loss"] == recs["clean"]["loss"]
+
+
+class TestWarmResolve:
+    def test_warm_start_matches_cold_quality(self):
+        """A drift-triggered warm re-solve must stay feasible and not be
+        meaningfully worse than a cold solve on the same data."""
+        orch = _orch(rounds=4)
+        cold = orch.resolve(0)
+        gains = orch.channel.gains(0) * 0.5          # 3 dB fade everywhere
+        warm = orch.resolve(0, warm=True, gains0=gains)
+        assert warm["warm"] and not cold["warm"]
+        opts = set(orch.cfg.precision.bit_options)
+        assert set(np.unique(warm["q"])).issubset(opts)
+
+        orch2 = _orch(rounds=4)
+        orch2.resolve(0)                             # prime the incumbent
+        cold2 = orch2.resolve(0, gains0=gains)       # cold on faded gains
+        assert float(warm["energy_plan"]) <= float(cold2["energy_plan"]) * 1.05
+
+    def test_drift_triggers_midcadence_resolve(self):
+        plan = FaultPlan(fade_prob=1.0, fade_depth_db=20.0)
+        orch = _orch(rounds=6, resolve_every=100, resolve_drift_db=6.0,
+                     faults=plan)
+        orch.plan_round(0)                           # cadence cold solve
+        recs = [orch.plan_round(r) for r in range(1, 6)]
+        assert any(r["resolved"] and r["warm_resolve"] for r in recs)
+
+    def test_no_drift_no_resolve(self):
+        orch = _orch(rounds=6, resolve_every=100, resolve_drift_db=1e9,
+                     faults=FaultPlan(packet_loss=0.05))
+        orch.plan_round(0)
+        recs = [orch.plan_round(r) for r in range(1, 6)]
+        assert not any(r["resolved"] for r in recs)
+
+
+class TestResilientOrchestrator:
+    def test_faulty_run_reports_resilience_counters(self):
+        orch = _orch(rounds=8, faults=PLAN, resolve_drift_db=6.0)
+        sim, *_ = make_sim()
+        out = orch.run(sim, batch_fn_for(make_data()))
+        assert len(out["history"]) == 8
+        assert out["total_energy_j"] > 0
+        # the fault intensities above make every counter fire within 8
+        # rounds x 6 devices at this seed
+        assert out["total_retransmissions"] > 0
+        assert out["total_retx_energy_j"] > 0
+        assert out["total_rejected"] > 0
+        assert out["total_dropped_midround"] > 0
+        rec = out["energy_log"][0]
+        for k in ("retransmissions", "retx_energy_j", "undelivered",
+                  "dropped_midround", "attempts", "e_comm_actual",
+                  "drift_db", "forced_cohort"):
+            assert k in rec, k
+        # actual comm energy >= lossless plan for every delivering client
+        for e in out["energy_log"]:
+            coh = e["cohort"]
+            assert (e["e_comm_actual"][coh]
+                    >= e["e_comm"][coh] - 1e-12).all()
+        # history rows carry the per-round retransmission accounting
+        assert all("retransmissions" in h for h in out["history"])
+
+    def test_retx_energy_is_a_surcharge_over_lossless(self):
+        """Same seed, loss on vs off: the lossy run's billed comm energy
+        exceeds the lossless run's by at least the retransmission energy of
+        the delivered clients."""
+        outs = {}
+        for name, pl in (("lossless", None),
+                         ("lossy", FaultPlan(packet_loss=0.25))):
+            orch = _orch(rounds=4, faults=pl)
+            sim, *_ = make_sim()
+            outs[name] = orch.run(sim, batch_fn_for(make_data()))
+        assert outs["lossy"]["total_retransmissions"] > 0
+        assert (outs["lossy"]["total_energy_j"]
+                > outs["lossless"]["total_energy_j"])
+
+    def test_fault_run_deterministic(self):
+        fin = []
+        for _ in range(2):
+            orch = _orch(rounds=5, faults=PLAN)
+            sim, *_ = make_sim(seed=3)
+            out = orch.run(sim, batch_fn_for(make_data(seed=3)))
+            fin.append((out["history"][-1]["loss"], out["total_energy_j"],
+                        out["total_retransmissions"]))
+        assert fin[0] == fin[1]
+
+
+class TestKillAndResume:
+    def test_resume_under_faults_is_bitwise(self, tmp_path):
+        """Kill after 4 of 8 faulty rounds, resume: the global model, the
+        energy log, and the resilience counters all match the uninterrupted
+        run exactly (not approximately)."""
+        kw = dict(faults=PLAN, resolve_drift_db=6.0, ckpt_every=2)
+
+        orch_a = _orch(rounds=8, tmp=str(tmp_path / "a"), **kw)
+        sim_a, *_ = make_sim(seed=5)
+        out_a = orch_a.run(sim_a, batch_fn_for(make_data(seed=5)))
+
+        orch_b = _orch(rounds=4, tmp=str(tmp_path / "b"), **kw)
+        sim_b, *_ = make_sim(seed=5)
+        orch_b.run(sim_b, batch_fn_for(make_data(seed=5)))
+        orch_c = _orch(rounds=8, tmp=str(tmp_path / "b"), **kw)
+        sim_c, *_ = make_sim(seed=5)
+        out_c = orch_c.run(sim_c, batch_fn_for(make_data(seed=5)))
+
+        pa = jax.tree_util.tree_leaves(sim_a.params)
+        pc = jax.tree_util.tree_leaves(sim_c.params)
+        for a, c in zip(pa, pc):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        assert out_a["total_energy_j"] == out_c["total_energy_j"]
+        assert (out_a["total_retransmissions"]
+                == out_c["total_retransmissions"])
+        assert out_a["total_retx_energy_j"] == out_c["total_retx_energy_j"]
+        assert len(out_c["energy_log"]) == 8         # replayed + fresh rounds
+
+    def test_resume_refuses_a_different_fault_plan(self, tmp_path):
+        ck = str(tmp_path / "ck")
+        orch = _orch(rounds=4, tmp=ck, faults=PLAN, ckpt_every=2)
+        sim, *_ = make_sim(seed=5)
+        orch.run(sim, batch_fn_for(make_data(seed=5)))
+
+        other = FaultPlan(packet_loss=0.4)
+        orch2 = _orch(rounds=8, tmp=ck, faults=other, ckpt_every=2)
+        sim2, *_ = make_sim(seed=5)
+        with pytest.raises(ValueError, match="different trajectory"):
+            orch2.run(sim2, batch_fn_for(make_data(seed=5)))
+
+
+class TestSessionFaultOptions:
+    def test_fl_sim_resume_via_runspec_is_bitwise(self, tmp_path):
+        """The RunSpec surface: options.faults + options.ckpt_dir make an
+        fl-sim run resumable with identical results."""
+        from repro.api import RunSpec
+        from repro.api.session import Session
+
+        faults = {"dropout_prob": 0.2, "packet_loss": 0.15,
+                  "corrupt_prob": 0.25}
+
+        def spec(rounds, ck):
+            return RunSpec(arch="resnet", workload="fl-sim", rounds=rounds,
+                           batch=8,
+                           options={"scheme": "fwq", "n_clients": 4,
+                                    "lr": 0.1, "eval_every": 0,
+                                    "faults": faults, "ckpt_dir": ck,
+                                    "ckpt_every": 2})
+
+        out_a = Session(spec(6, str(tmp_path / "a"))).run()
+        Session(spec(3, str(tmp_path / "b"))).run()
+        out_c = Session(spec(6, str(tmp_path / "b"))).run()
+
+        assert out_a["history"][-1]["loss"] == out_c["history"][-1]["loss"]
+        assert out_a["total_energy_j"] == out_c["total_energy_j"]
+        assert out_a["total_retransmissions"] == out_c["total_retransmissions"]

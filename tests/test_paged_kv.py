@@ -20,7 +20,8 @@ import pytest
 from repro.configs import get_config, smoke_variant
 from repro.kernels import ops
 from repro.launch.mesh import axis_ctx_for, make_test_mesh
-from repro.launch.paging import PagePool, SlotPager, set_page_tables
+from repro.launch.paging import (
+    PagePool, SlotPager, plan_admissions, set_page_tables)
 from repro.launch.steps import (
     build_cached_prefill, build_decode_step, build_init_fn,
     init_global_caches)
@@ -527,6 +528,71 @@ class TestCapacityGuard:
         assert pool.free_pages == 4
         with pytest.raises(ValueError):
             pool.free([99])
+
+
+class TestAdmissionFairness:
+    def test_fifo_within_slot_limit(self):
+        admit, blocked = plan_admissions(4, 2, [1, 2, 1])
+        assert admit == [0, 1]
+        assert blocked == []                # third hit the slot limit, not pages
+
+    def test_blocked_head_reserves_everything(self):
+        """An oversized head request reserves all free pages: younger small
+        requests see zero surplus and must wait behind it."""
+        admit, blocked = plan_admissions(3, 4, [4, 1, 1])
+        assert admit == [] and blocked == [0, 1, 2]
+
+    def test_no_leapfrogging_past_a_blocked_request(self):
+        """A page-blocked request reserves every usable page, so younger
+        requests cannot leapfrog it — strict FIFO on the page resource."""
+        admit, blocked = plan_admissions(5, 4, [4, 1, 6, 1])
+        assert admit == [0, 1]             # fits before anything blocks
+        assert blocked == [2, 3]           # and nothing passes index 2
+
+    def test_big_request_admits_under_sustained_small_load(self):
+        """Starvation regression: with one page reclaimed per cycle and a
+        fresh small request arriving every cycle, the big head-of-queue
+        request must still admit (freed pages accrue to it via reservation;
+        a grab-what-fits policy would hand every page to the newcomers)."""
+        queue = [5]                        # big request waiting, pool drained
+        free = 0
+        admitted = []
+        for _ in range(20):
+            free += 1                      # one completion reclaims a page
+            queue.append(1)                # sustained small-request load
+            take, _blocked = plan_admissions(free, 8, queue)
+            for qi in reversed(take):
+                need = queue.pop(qi)
+                free -= need
+                admitted.append(need)
+            if 5 in admitted:
+                break
+        assert 5 in admitted
+        # and it got there in exactly the 5 cycles its demand requires
+        assert len([a for a in admitted if a == 1]) == 0
+
+    def test_serve_rejects_request_that_can_never_fit(self):
+        """A request whose page demand exceeds the whole pool must raise at
+        admission planning (waiting would deadlock the queue forever)."""
+        from repro.launch.serve import run_serve
+
+        with pytest.raises(ValueError, match="can never fit"):
+            run_serve("yi-6b", smoke=True, steps=8, batch=2, s_max=64,
+                      prompt_len=8, serve_bits=7, requests=2, max_new=40,
+                      page_size=8, pool_pages=2, quiet=True)
+
+    def test_mixed_load_completes_with_tight_pool(self):
+        """Ragged prompts + staggered caps against a pool sized for barely
+        more than the largest single request: every request completes, with
+        deferrals along the way."""
+        from repro.launch.serve import run_serve
+
+        stats = run_serve("yi-6b", smoke=True, steps=64, batch=4, s_max=64,
+                          prompt_len=8, serve_bits=7, requests=8, max_new=12,
+                          page_size=8, pool_pages=4, vary_prompt=True,
+                          quiet=True)
+        assert stats.completed == 8
+        assert stats.deferred_admissions > 0
 
 
 class TestPrefillBounds:

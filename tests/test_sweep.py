@@ -174,10 +174,48 @@ class TestResumability:
         out = SweepRunner(bad, store, quiet=True).run()
         assert len(out["failed"]) == 1
         key = out["failed"][0]
-        assert store.get(key)["status"] == "error"
+        rec = store.get(key)
+        assert rec["status"] == "error"
+        # a crash row must carry enough to diagnose without re-running
+        assert "error" in rec["metrics"]
+        assert "Traceback" in rec["metrics"]["traceback"]
         # default: errors re-run; --keep-failed semantics: skipped
         out2 = SweepRunner(bad, store, quiet=True).run(rerun_failed=False)
         assert out2["skipped"] == [key] and not out2["failed"]
+
+    def test_subprocess_crash_is_a_failed_row_with_stderr(self, tmp_path):
+        """A cell whose subprocess exits nonzero becomes an explicit error
+        row (returncode + stderr tail) and the grid keeps going — a dead
+        cell must never abort the sweep."""
+        sweep = Sweep(
+            name="crashy",
+            base={"arch": "yi-6b", "workload": "serve", "smoke": True,
+                  "batch": 2, "seq": 32,
+                  "options": {"steps": 4, "quiet": True}},
+            axes=(Axis("options.attn_impl", ("bogus", "ref")),))
+        store = ResultsStore(str(tmp_path / "c.jsonl"))
+        out = SweepRunner(sweep, store, timeout_s=900, quiet=True).run()
+        assert len(out["failed"]) == 1 and len(out["ran"]) == 1
+        rec = store.get(out["failed"][0])
+        assert rec["status"] == "error"
+        assert rec["metrics"]["returncode"] != 0
+        assert "attn_impl" in rec["metrics"]["stderr"]   # the actual raise
+        # the healthy sibling cell still ran to completion
+        assert store.get(out["ran"][0])["status"] == "ok"
+
+    def test_subprocess_timeout_is_a_failed_row(self, tmp_path):
+        sweep = Sweep(
+            name="slow",
+            base={"arch": "yi-6b", "workload": "serve", "smoke": True,
+                  "batch": 2, "seq": 32,
+                  "options": {"steps": 4, "quiet": True}})
+        store = ResultsStore(str(tmp_path / "t.jsonl"))
+        out = SweepRunner(sweep, store, timeout_s=3, quiet=True).run()
+        assert out["failed"] and not out["ran"]
+        rec = store.get(out["failed"][0])
+        assert rec["status"] == "timeout"
+        assert rec["metrics"]["timeout_s"] == 3
+        assert "stderr" in rec["metrics"]    # tail captured (may be empty)
 
 
 class TestMarkers:

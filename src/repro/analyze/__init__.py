@@ -1,37 +1,74 @@
-"""Static precision / wire / kernel lint over jaxprs and lowered HLO.
+"""Static precision / wire / kernel / value-range lint over traced graphs.
 
-Three rule families, none of which execute any compiled code:
+Five rule families, none of which execute any compiled code:
 
-* ``precision.*`` (:mod:`repro.analyze.precision_flow`) — walks traced
-  jaxprs tracking which ``dot_general`` ops consume QTensor codes that were
-  eagerly dequantized instead of riding the ``quant_matmul`` /
-  ``expert_dispatch`` fast path, and flags integer ``psum`` accumulators
-  narrower than ``n * (2^bits - 1)`` requires.
+* ``precision.*`` (:mod:`repro.analyze.precision_flow`,
+  :mod:`repro.analyze.static_proofs`) — walks traced jaxprs tracking which
+  ``dot_general`` ops consume QTensor codes that were eagerly dequantized
+  instead of riding the ``quant_matmul`` / ``expert_dispatch`` fast path,
+  and certifies the error budget: the quantization error the policy's bits
+  imply must fit the convergence-bound term GBD optimizes against.
+* ``overflow.*`` / ``numerics.*`` (:mod:`repro.analyze.absint`,
+  :mod:`repro.analyze.ranges`) — a forward abstract interpreter
+  propagating value intervals, integer exactness, and quantization-error
+  bounds through the same jaxprs: proves every integer ``psum``
+  accumulator holds its worst-case code sum (recording headroom), and
+  flags exp/log/div/rsqrt consuming unguarded zero-crossing or unbounded
+  intervals.  :mod:`repro.analyze.static_proofs` adds the closed-form
+  per-cell complement (works for ``fl-sim`` cells with no graph).
 * ``wire.*`` (:mod:`repro.analyze.wire_lint`) — reads the per-collective
   records :func:`repro.roofline.hlo_parse.parse_module` extracts from the
   partitioned HLO and flags f32 all-reduces under a low-bit
-  ``PrecisionPolicy.comm``, mis-sized integer wire dtypes, all-gathers the
-  sharding rule table doesn't predict, and drift against
-  ``Session.comm_report()``.
+  ``PrecisionPolicy.comm``, mis-sized integer wire dtypes (all-reduce and
+  reduce-scatter), unmodeled collectives, all-gathers the sharding rule
+  table doesn't predict, and drift against ``Session.comm_report()``.
 * ``kernel.*`` (:mod:`repro.analyze.kernel_check`) — enumerates every
   Pallas BlockSpec index map over its grid from the
-  :class:`repro.kernels.spec.KernelSpec` metadata the kernels export:
-  coverage, out-of-bounds DMA, scratch shape/dtype consistency.
+  :class:`repro.kernels.spec.KernelSpec` metadata the kernels export
+  (coverage, out-of-bounds DMA, scratch consistency) and range-checks
+  scalar-prefetch operands (page-table entries within the pool, lengths
+  within the owned pages).
 
 Front doors: ``Session.analyze()``, the ``repro-analyze`` CLI
-(``python -m repro analyze``), and the ``analyze.toml`` allowlist for the
-known-legitimate eager fallbacks.
+(``python -m repro analyze``), the ``analyze.toml`` allowlist for the
+known-legitimate exceptions (stale entries surface as
+``meta.dead_allowlist``), and the differential baseline gate
+(:mod:`repro.analyze.baseline`) CI runs with.
 """
 
-from repro.analyze.allowlist import apply_allowlist, load_allowlist
+from repro.analyze.absint import abstract_eval, interpret_jaxpr
+from repro.analyze.allowlist import (
+    apply_allowlist,
+    dead_allowlist_findings,
+    dead_entries,
+    load_allowlist,
+)
+from repro.analyze.baseline import (
+    diff_against_baseline,
+    finding_identity,
+    load_baseline,
+    write_baseline,
+)
 from repro.analyze.findings import Finding, source_key, worst_severity
 from repro.analyze.kernel_check import check_kernel_spec, shipped_kernel_specs
 from repro.analyze.precision_flow import lint_jaxpr
-from repro.analyze.runner import analyze_session
+from repro.analyze.ranges import AbsVal
+from repro.analyze.runner import ALL_RULE_FAMILIES, analyze_session
+from repro.analyze.static_proofs import (
+    check_error_budget,
+    overflow_margin_table,
+    prove_spec,
+    prove_wire_accumulator,
+)
 from repro.analyze.wire_lint import WireContext, check_comm_report, lint_module
 
 __all__ = [
-    "Finding", "WireContext", "analyze_session", "apply_allowlist",
-    "check_comm_report", "check_kernel_spec", "lint_jaxpr", "lint_module",
-    "load_allowlist", "shipped_kernel_specs", "source_key", "worst_severity",
+    "ALL_RULE_FAMILIES", "AbsVal", "Finding", "WireContext", "abstract_eval",
+    "analyze_session", "apply_allowlist", "check_comm_report",
+    "check_error_budget", "check_kernel_spec", "dead_allowlist_findings",
+    "dead_entries", "diff_against_baseline", "finding_identity",
+    "interpret_jaxpr", "lint_jaxpr", "lint_module", "load_allowlist",
+    "load_baseline", "overflow_margin_table", "prove_spec",
+    "prove_wire_accumulator", "shipped_kernel_specs", "source_key",
+    "worst_severity", "write_baseline",
 ]

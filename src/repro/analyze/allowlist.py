@@ -71,3 +71,30 @@ def apply_allowlist(findings, entries):
             f = dataclasses.replace(f, allowed=True, allow_reason=hit.reason)
         out.append(f)
     return out
+
+
+def dead_entries(findings, entries) -> list[AllowEntry]:
+    """Allowlist entries whose patterns matched zero findings.
+
+    A dead entry means the code it excused moved or was fixed — the audit
+    trail is stale.  Call over the FULL run's findings (all cells), never
+    per cell: an entry is alive if ANY cell still triggers it.
+    """
+    return [e for e in entries
+            if not any(e.matches(f) for f in findings)]
+
+
+def dead_allowlist_findings(findings, entries, *, path: str = ""):
+    """``meta.dead_allowlist`` warnings for :func:`dead_entries`."""
+    from repro.analyze.findings import Finding
+
+    out = []
+    for e in dead_entries(findings, entries):
+        out.append(Finding(
+            rule="meta.dead_allowlist", severity="warn",
+            message=(f"allowlist entry (rule={e.rule!r}, key={e.key!r}) "
+                     "matched no finding in this run — the exception it "
+                     "excused is gone; delete the entry"
+                     + (f" from {path}" if path else "")),
+            key=f"allow:{e.rule}:{e.key}", where=path))
+    return out

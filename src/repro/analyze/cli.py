@@ -4,14 +4,20 @@ Usage::
 
     repro-analyze                                  # ci-tiny grid, analyze.toml
     repro-analyze --preset ci-tiny --fail-on error # the CI gate
+    repro-analyze --rules overflow,numerics,precision --preset grad-comm-wire
     repro-analyze --arch yi-6b --workload serve --precision lazy_int8
-    repro-analyze --no-compile --json              # jaxpr+kernel rules only
+    repro-analyze --no-compile --json              # no XLA compiles
+    repro-analyze --write-baseline results/analyze_baseline.json
+    repro-analyze --baseline results/analyze_baseline.json   # diff gate
 
 Runs :func:`repro.analyze.runner.analyze_session` over every cell of a
 named sweep preset (default ``ci-tiny`` — the same grid CI executes), or
 over one ad-hoc RunSpec built from ``--arch``/``--workload`` flags.
-Findings matching ``analyze.toml`` stay visible but don't gate; the exit
-code is non-zero iff any unallowlisted finding reaches ``--fail-on``.
+Findings matching ``analyze.toml`` stay visible but don't gate; allowlist
+entries that matched nothing across the WHOLE run surface as
+``meta.dead_allowlist`` warnings.  With ``--baseline`` the gate is
+*differential*: only findings absent from the committed snapshot count,
+so rule families can be broadened without allowlist churn.
 """
 
 from __future__ import annotations
@@ -45,15 +51,26 @@ def _cells(args) -> list:
         if precision:
             d["precision"] = precision
         return [RunSpec.from_dict(d)]
-    from repro.sweep.grid import get_preset
+    from repro.sweep.grid import PRESETS, get_preset
 
-    return [c.spec for c in get_preset(args.preset).cells()]
+    names = ([p for p in args.preset.split(",") if p]
+             if args.preset != "all" else sorted(PRESETS))
+    specs, seen = [], set()
+    for name in names:
+        for c in get_preset(name).cells():
+            if c.key in seen:          # presets share cells (ci-tiny does)
+                continue
+            seen.add(c.key)
+            specs.append(c.spec)
+    return specs
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro-analyze", description=__doc__)
     ap.add_argument("--preset", default="ci-tiny",
-                    help="sweep preset naming the spec matrix to analyze")
+                    help="sweep preset(s) naming the spec matrix to analyze "
+                         "(comma-separated, or 'all'; duplicate cells "
+                         "dedupe by content hash)")
     ap.add_argument("--arch", default="",
                     help="analyze one ad-hoc RunSpec instead of a preset")
     ap.add_argument("--workload", default="serve")
@@ -62,16 +79,29 @@ def main(argv=None) -> int:
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--precision", default="lazy_int8",
                     help="'lazy_int8' or a PrecisionPolicy JSON dict")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule families to run "
+                         "(precision,wire,kernel,overflow,numerics; "
+                         "'' = all)")
     ap.add_argument("--fail-on", choices=("error", "warn", "never"),
                     default="error",
                     help="exit non-zero when an unallowlisted finding at or "
                          "above this severity exists")
     ap.add_argument("--allowlist", default="analyze.toml",
                     help="per-rule allowlist file ('' disables)")
+    ap.add_argument("--baseline", default="",
+                    help="committed findings snapshot: gate only on findings "
+                         "NOT already in it (differential mode)")
+    ap.add_argument("--write-baseline", default="",
+                    help="write this run's findings as a new baseline "
+                         "snapshot and exit 0")
     ap.add_argument("--no-compile", action="store_true",
                     help="skip the HLO wire lint (no XLA compiles)")
     ap.add_argument("--json", action="store_true",
-                    help="emit findings as a JSON list")
+                    help="emit findings (and proofs) as JSON on stdout")
+    ap.add_argument("--json-out", default="",
+                    help="also write the findings+proofs JSON to this path "
+                         "(the CI artifact)")
     args = ap.parse_args(argv)
 
     specs = _cells(args)
@@ -82,21 +112,59 @@ def main(argv=None) -> int:
 
     _force_device_count(max([_mesh_devices(s.mesh) for s in specs] + [1]))
 
+    from repro.analyze.allowlist import dead_allowlist_findings, load_allowlist
+    from repro.analyze.baseline import (
+        diff_against_baseline,
+        load_baseline,
+        write_baseline,
+    )
     from repro.analyze.findings import at_or_above
+    from repro.analyze.runner import normalize_rules
     from repro.api.session import Session
 
+    rules = normalize_rules(args.rules) if args.rules else None
     allowlist = args.allowlist or None
-    findings = []
+    findings, proofs = [], []
     for spec in specs:
         label = f"{spec.arch}:{spec.workload}"
         if not args.json:
             print(f"== analyzing {label} (mesh {spec.mesh}) ==",
                   flush=True)
         findings.extend(Session(spec).analyze(
-            compile=not args.no_compile, allowlist=allowlist))
+            compile=not args.no_compile, allowlist=allowlist,
+            rules=rules, proofs=proofs))
 
+    # dead-allowlist detection runs over the AGGREGATE: an entry is alive
+    # if any cell of the whole run still triggers it
+    if allowlist:
+        entries = load_allowlist(allowlist)
+        findings.extend(dead_allowlist_findings(findings, entries,
+                                                path=allowlist))
+
+    if args.write_baseline:
+        extra = (load_baseline(args.baseline) if args.baseline
+                 and os.path.exists(args.baseline) else ())
+        doc = write_baseline(findings, args.write_baseline,
+                             extra_identities=extra)
+        print(f"baseline written: {args.write_baseline} "
+              f"({len(findings)} findings, "
+              f"{len(doc['identities'])} identities)")
+        return 0
+
+    gated = findings
+    if args.baseline:
+        gated = diff_against_baseline(findings, load_baseline(args.baseline))
+
+    doc = {"findings": [f.to_dict() for f in findings],
+           "proofs": proofs,
+           "new_findings": ([f.to_dict() for f in gated]
+                            if args.baseline else None)}
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
     if args.json:
-        print(json.dumps([f.to_dict() for f in findings], indent=2))
+        print(json.dumps(doc, indent=2, sort_keys=True))
     else:
         for f in findings:
             print(f.format())
@@ -105,10 +173,15 @@ def main(argv=None) -> int:
         n_warn = sum(1 for f in findings
                      if f.severity == "warn" and not f.allowed)
         n_allowed = sum(1 for f in findings if f.allowed)
+        n_proved = sum(1 for p in proofs if p.get("ok"))
         print(f"-- {len(findings)} findings: {n_err} errors, {n_warn} "
-              f"warnings, {n_allowed} allowlisted --")
+              f"warnings, {n_allowed} allowlisted; {n_proved}/{len(proofs)} "
+              "proofs hold --")
+        if args.baseline:
+            print(f"-- differential vs {args.baseline}: "
+                  f"{len(gated)} new finding(s) --")
 
-    if args.fail_on != "never" and at_or_above(findings, args.fail_on):
+    if args.fail_on != "never" and at_or_above(gated, args.fail_on):
         return 1
     return 0
 

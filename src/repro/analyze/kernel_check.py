@@ -120,6 +120,31 @@ def _check_scratch(spec, sc, cell) -> Finding | None:
     return None
 
 
+def _check_scalar(spec, sc, cell) -> Finding | None:
+    """``kernel.scalar_oob`` — scalar-prefetch values outside their range.
+
+    BlockSpec enumeration can only see index maps; the VALUES a launch
+    prefetches (page-table entries, lengths) steer those maps at runtime,
+    so each declared :class:`~repro.kernels.spec.ScalarOperand` is
+    range-checked against the bounds the kernel's addressing assumes.
+    """
+    import numpy as np
+
+    vals = np.asarray(sc.values)
+    if vals.size == 0:
+        return None
+    vmin, vmax = int(vals.min()), int(vals.max())
+    if vmin < sc.lo or vmax > sc.hi:
+        n_bad = int(np.sum((vals < sc.lo) | (vals > sc.hi)))
+        return Finding(
+            rule="kernel.scalar_oob", severity="error",
+            message=(f"scalar operand {sc.name}: {n_bad} value(s) outside "
+                     f"[{sc.lo}, {sc.hi}] (observed [{vmin}, {vmax}])"
+                     + (f" — {sc.note}" if sc.note else "")),
+            key=f"{spec.name}:{sc.name}", where=spec.source, cell=cell)
+    return None
+
+
 def check_kernel_spec(spec, cell: str = "") -> list[Finding]:
     """All kernel rules over one spec; at most one finding per operand."""
     findings = []
@@ -129,6 +154,10 @@ def check_kernel_spec(spec, cell: str = "") -> list[Finding]:
             findings.append(f)
     for sc in spec.scratch:
         f = _check_scratch(spec, sc, cell)
+        if f is not None:
+            findings.append(f)
+    for sc in getattr(spec, "scalars", ()):
+        f = _check_scalar(spec, sc, cell)
         if f is not None:
             findings.append(f)
     return findings

@@ -95,26 +95,61 @@ def _kernel_cells(session) -> list:
         n_pool=int(session.spec.opt("pool_pages", 6)))
 
 
+#: the rule families ``analyze_session`` can run (``rules=None`` = all)
+ALL_RULE_FAMILIES = ("precision", "wire", "kernel", "overflow", "numerics")
+
+
+def _want(rules, family: str) -> bool:
+    return rules is None or family in rules
+
+
+def normalize_rules(rules) -> frozenset | None:
+    """Parse a rules selection (None / iterable / comma string) -> set."""
+    if rules is None:
+        return None
+    if isinstance(rules, str):
+        rules = [r for r in rules.split(",") if r]
+    out = frozenset(str(r).strip() for r in rules)
+    unknown = out - set(ALL_RULE_FAMILIES)
+    if unknown:
+        raise ValueError(f"unknown rule families {sorted(unknown)}; "
+                         f"options: {ALL_RULE_FAMILIES}")
+    return out
+
+
 def analyze_session(session, *, compile: bool = True, allowlist_path=None,
-                    check_kernels: bool = True) -> list[Finding]:
-    """All three rule families over one Session's step graphs.
+                    check_kernels: bool = True, rules=None,
+                    proofs: list | None = None) -> list[Finding]:
+    """All rule families over one Session's step graphs.
 
     ``compile=False`` skips the HLO wire lint (jaxpr + kernel rules only)
     — much faster, but blind to collectives.  ``allowlist_path=None``
     skips allowlisting entirely (the CLI passes ``analyze.toml``).
+    ``rules`` selects families from :data:`ALL_RULE_FAMILIES` (``None`` =
+    all): ``overflow``/``numerics`` drive the abstract interpreter over
+    each traced graph plus the analytic per-cell accumulator proof;
+    ``precision`` adds the error-budget certificate on FL cells.  Positive
+    proof records (accumulator fits, budget holds) are appended to
+    ``proofs`` when a list is passed — findings only report failures.
     """
+    from repro.analyze.absint import interpret_jaxpr
     from repro.analyze.kernel_check import check_kernel_spec
     from repro.analyze.precision_flow import lint_jaxpr
+    from repro.analyze.static_proofs import prove_spec
     from repro.analyze.wire_lint import check_comm_report, lint_module
     from repro.roofline.hlo_parse import parse_module
 
+    rules = normalize_rules(rules)
+    absint_rules = tuple(r for r in ("overflow", "numerics")
+                         if _want(rules, r))
     findings: list[Finding] = []
     spec = session.spec
 
     if spec.workload == "fl-sim":
         findings.append(Finding(
             rule="analyze.skipped", severity="info",
-            message="fl-sim cells have no model-zoo step graph to lint",
+            message=("fl-sim cells have no model-zoo step graph to lint; "
+                     "analytic proofs only"),
             key=f"fl-sim:{spec.arch}", cell=f"fl-sim:{spec.arch}"))
     else:
         axis_sizes = dict(zip(session.mesh.axis_names,
@@ -123,12 +158,19 @@ def analyze_session(session, *, compile: bool = True, allowlist_path=None,
         for label, shape in lint_cells(session):
             traced, meta = session.trace(shape)
             kind = meta["kind"]
-            findings.extend(lint_jaxpr(
-                traced.jaxpr, policy=policy, axis_sizes=axis_sizes,
-                cell=label,
-                expect_fastpath=(policy.lazy and policy.packed
-                                 and kind == "decode")))
-            if compile:
+            if _want(rules, "precision"):
+                findings.extend(lint_jaxpr(
+                    traced.jaxpr, policy=policy, axis_sizes=axis_sizes,
+                    cell=label,
+                    expect_fastpath=(policy.lazy and policy.packed
+                                     and kind == "decode")))
+            if absint_rules:
+                res = interpret_jaxpr(traced.jaxpr, axis_sizes=axis_sizes,
+                                      cell=label, rules=absint_rules)
+                findings.extend(res.findings)
+                if proofs is not None:
+                    proofs.extend(res.proofs)
+            if compile and _want(rules, "wire"):
                 compiled = traced.lower().compile()
                 mc = parse_module(compiled.as_text())
                 findings.extend(lint_module(
@@ -137,7 +179,15 @@ def analyze_session(session, *, compile: bool = True, allowlist_path=None,
                     findings.extend(check_comm_report(
                         mc, session.comm_report(), cell=label))
 
-    if check_kernels and spec.workload != "fl-sim":
+    proof_rules = tuple(r for r in ("overflow", "precision")
+                        if _want(rules, r))
+    if proof_rules:
+        records, fs = prove_spec(spec, rules=proof_rules)
+        findings.extend(fs)
+        if proofs is not None:
+            proofs.extend(records)
+
+    if check_kernels and spec.workload != "fl-sim" and _want(rules, "kernel"):
         for ks in _kernel_cells(session):
             findings.extend(check_kernel_spec(ks, cell=f"kernels:{ks.name}"))
 

@@ -14,9 +14,17 @@ should be on the wire:
 * ``wire.unexpected_allgather`` — an all-gather whose element dtype the
   sharding rule table doesn't predict on this mesh (unintended resharding;
   on a pure-DP mesh ANY all-gather is unexpected).
-* ``wire.comm_report_mismatch`` — the HLO's integer all-reduce bytes
-  disagree with :func:`repro.dist.wire.grad_wire_report` — the two byte
-  accountings (lint vs ``Session.comm_report()``) must not drift.
+* ``wire.narrow_reduce_scatter`` / ``wire.wide_reduce_scatter`` — the same
+  accumulator contract applied to integer reduce-scatters (XLA rewrites
+  sharded all-reduces into them); float reduce-scatters are the FSDP
+  gradient path and pass.
+* ``wire.unknown_collective`` — a replica-grouped op no wire rule models
+  (``hlo_parse`` records it as ``unknown:<opcode>`` with conservative
+  bytes); the accounting cannot silently under-count.
+* ``wire.comm_report_mismatch`` — the HLO's integer all-reduce +
+  reduce-scatter bytes disagree with
+  :func:`repro.dist.wire.grad_wire_report` — the two byte accountings
+  (lint vs ``Session.comm_report()``) must not drift.
 
 Degenerate records (``group_size <= 1``) never fire rules: a collective
 over one participant moves nothing.
@@ -123,6 +131,42 @@ def lint_module(mc, ctx: WireContext, cell: str = "") -> list[Finding]:
                                  "necessary wire bytes"),
                         key=key, where=where, cell=cell))
 
+        elif rec.kind == "reduce-scatter":
+            # FSDP gradients reduce-scatter in f32 by design (the comm role
+            # compresses only the DP all-reduce), so floats pass; an
+            # INTEGER reduce-scatter carries summed wire codes and must
+            # obey the same accumulator contract as the all-reduce.
+            if required is not None and rec.dtype in _INT_BYTES:
+                have = _INT_BYTES[rec.dtype]
+                if have < required.itemsize:
+                    findings.append(Finding(
+                        rule="wire.narrow_reduce_scatter", severity="error",
+                        message=(f"{rec.dtype} reduce-scatter accumulator "
+                                 f"is narrower than {required.name} = "
+                                 f"wire_dtype(comm={ctx.policy.comm}, "
+                                 f"n={ctx.n_clients}): the scattered code "
+                                 "sums overflow"),
+                        key=key, where=where, cell=cell))
+                elif have > required.itemsize:
+                    findings.append(Finding(
+                        rule="wire.wide_reduce_scatter", severity="warn",
+                        message=(f"{rec.dtype} reduce-scatter is wider than "
+                                 f"{required.name} implies — "
+                                 f"{have / required.itemsize:.0f}x the "
+                                 "necessary wire bytes"),
+                        key=key, where=where, cell=cell))
+
+        elif rec.kind.startswith("unknown:"):
+            findings.append(Finding(
+                rule="wire.unknown_collective", severity="warn",
+                message=(f"{rec.kind.split(':', 1)[1]} moves "
+                         f"{rec.dtype}[{rec.elems}] over group "
+                         f"{rec.group_size} but no wire rule models it: "
+                         "byte accounting treats the full result as wire "
+                         "bytes (upper bound) — teach hlo_parse/wire_lint "
+                         "this opcode"),
+                key=key, where=where, cell=cell))
+
         elif rec.kind == "all-gather":
             if rec.dtype not in ctx.expected_gather_dtypes:
                 expect = (sorted(ctx.expected_gather_dtypes)
@@ -159,7 +203,10 @@ def check_comm_report(mc, report: dict, cell: str = "",
     expect = int(report["replicated_elems"]) * itemsize
     have = 0.0
     for rec in mc.collectives:
-        if rec.kind != "all-reduce":
+        # integer codes may cross as an all-reduce OR a reduce-scatter
+        # (XLA rewrites the former into the latter under sharding): both
+        # count toward the same wire budget
+        if rec.kind not in ("all-reduce", "reduce-scatter"):
             continue
         for dt, elems in (rec.parts or ((rec.dtype, rec.elems),)):
             if dt in _INT_BYTES:

@@ -875,20 +875,26 @@ class Session:
         return lowered.compile(), lowered, meta
 
     def analyze(self, *, compile: bool = True, allowlist: str | None = None,
-                check_kernels: bool = True) -> list:
-        """Static precision / wire / kernel lint over this spec's graphs.
+                check_kernels: bool = True, rules=None,
+                proofs: list | None = None) -> list:
+        """Static precision / wire / kernel / range lint over this spec.
 
         Traces (and, with ``compile=True``, compiles) the step graphs the
         RunSpec implies and returns a list of
         :class:`repro.analyze.findings.Finding` — nothing is executed.
         ``allowlist`` names an ``analyze.toml`` to mark known-legitimate
-        findings (``None`` skips allowlisting).
+        findings (``None`` skips allowlisting).  ``rules`` selects rule
+        families (see ``repro.analyze.runner.ALL_RULE_FAMILIES``); the
+        ``overflow``/``numerics`` families run the abstract interpreter and
+        append positive proof records (accumulator headroom, error budget)
+        to ``proofs`` when a list is passed.
         """
         from repro.analyze.runner import analyze_session
 
         return analyze_session(self, compile=compile,
                                allowlist_path=allowlist,
-                               check_kernels=check_kernels)
+                               check_kernels=check_kernels,
+                               rules=rules, proofs=proofs)
 
     def run_dryrun(self, shape=None, variant: dict | None = None,
                    *, verbose: bool = True) -> dict:

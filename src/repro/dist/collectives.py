@@ -149,16 +149,30 @@ class AxisCtx:
                                   axis=axis, tiled=True)
 
 
+def code_bound(bits: int) -> int:
+    """Largest |code| a ``bits``-wide SR quantizer can emit: ``2^bits - 1``.
+
+    This is the *exactness contract* between the runtime and the static
+    analyzer: :func:`quantized_psum_batch` clips its codes to
+    ``±code_bound(bits)`` before the integer all-reduce, and both
+    :func:`wire_dtype` (runtime) and ``repro.analyze`` (static, via the
+    interval interpreter and the analytic per-cell proof) reason from the
+    same bound — ``n_clients * code_bound(bits)`` must fit the accumulator.
+    """
+    return 2 ** int(bits) - 1
+
+
 def wire_dtype(bits: int, n_clients: int):
     """Narrowest signed integer dtype whose sum of codes is exact.
 
-    Per-client codes lie in ``[-(2^bits - 1), 2^bits - 1]``; an all-reduce
-    over ``n_clients`` needs the accumulator to hold ``n * (2^bits - 1)``.
-    This is the dtype that actually crosses the wire, so lower ``comm`` bits
-    shrink the measured all-reduce bytes (s8/s16 vs f32 in the HLO) instead
-    of always paying the int32 accumulator.
+    Per-client codes lie in ``[-code_bound(bits), code_bound(bits)]``; an
+    all-reduce over ``n_clients`` needs the accumulator to hold
+    ``n * code_bound(bits)``.  This is the dtype that actually crosses the
+    wire, so lower ``comm`` bits shrink the measured all-reduce bytes
+    (s8/s16 vs f32 in the HLO) instead of always paying the int32
+    accumulator.
     """
-    need = n_clients * (2 ** int(bits) - 1)
+    need = n_clients * code_bound(bits)
     if need <= jnp.iinfo(jnp.int8).max:
         return jnp.int8
     if need <= jnp.iinfo(jnp.int16).max:
@@ -246,7 +260,7 @@ def quantized_psum_batch(axes: AxisCtx, grad, rng, bits, *,
     gf = _nonfinite_guard(grad.astype(jnp.float32), on_nonfinite, ax)
     s = jax.lax.pmax(jnp.max(jnp.abs(gf)), ax)
     s = jnp.where(s > 0, s, 1.0)
-    lim = 2.0 ** int(bits) - 1.0
+    lim = float(code_bound(int(bits)))
     step = s / lim                        # = s * Delta_q, the grid pitch
     ckey = jax.random.fold_in(rng, axes.dp_index())
     codes = _sr_round(gf / step, ckey)

@@ -28,7 +28,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.spec import BlockOperand, KernelSpec, ScratchSpec
+from repro.kernels.spec import (
+    BlockOperand,
+    KernelSpec,
+    ScalarOperand,
+    ScratchSpec,
+)
 
 DEFAULT_BLOCKS = (256, 256)  # (block_q, block_k)
 
@@ -327,5 +332,17 @@ def decode_spec(B: int, KV: int, G: int, hd: int, *, page: int, n_pool: int,
             ScratchSpec("m_run", (G, 1), "float32"),
             ScratchSpec("l_run", (G, 1), "float32"),
             ScratchSpec("acc_run", (G, hd), "float32", binds="acc"),
+        ),
+        # the scalar-prefetch contract: kv_map clamps -1 to page 0 and the
+        # compute guard masks it, so -1 is legal; anything >= n_pool would
+        # DMA outside the page pool regardless of masking.  Lengths bound
+        # the compute guard: at most every owned page fully used.
+        scalars=(
+            ScalarOperand("page_table", pt_flat, -1, n_pool - 1,
+                          note="-1 = unallocated (masked); valid pool rows "
+                               f"are [0, {n_pool})"),
+            ScalarOperand("lengths", ln, 0, n_pmax * page,
+                          note=f"{n_pmax} pages x {page} slots owned at "
+                               "most"),
         ),
     )

@@ -36,6 +36,24 @@ class BlockOperand:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScalarOperand:
+    """One scalar-prefetch operand and the value range the kernel assumes.
+
+    Scalar-prefetch values (page tables, sequence lengths) steer index maps
+    and compute guards, so an out-of-range entry is an out-of-bounds DMA
+    the BlockSpec enumeration alone cannot see.  ``values`` is the CONCRETE
+    integer array a launch would pass; ``lo``/``hi`` are the inclusive
+    bounds the kernel's addressing arithmetic is safe under.
+    """
+
+    name: str
+    values: object                  # concrete integer array (numpy is fine)
+    lo: int
+    hi: int
+    note: str = ""                  # why the bounds are what they are
+
+
+@dataclasses.dataclass(frozen=True)
 class ScratchSpec:
     """One VMEM scratch allocation.
 
@@ -60,6 +78,7 @@ class KernelSpec:
     inputs: tuple                   # tuple[BlockOperand, ...]
     outputs: tuple                  # tuple[BlockOperand, ...]
     scratch: tuple = ()             # tuple[ScratchSpec, ...]
+    scalars: tuple = ()             # tuple[ScalarOperand, ...]
 
     @property
     def operands(self):

@@ -115,6 +115,38 @@ class ModuleCosts:
         return dataclasses.asdict(self)
 
 
+def _unknown_collective_record(line: str, comp: str) -> CollectiveOp | None:
+    """Best-effort record for a replica-grouped op the walker doesn't know.
+
+    ``*-done`` halves and shapeless lines are skipped (consistent with the
+    known-op path); wire bytes are the full result bytes — an upper bound,
+    so byte accounting can over- but never under-count the unknown op.
+    """
+    md = _DEF_RE.match(line)
+    if md is None:
+        return None
+    head = md.group(2).split("(", 1)[0].strip()
+    opcode = head.split()[-1] if head.split() else "?"
+    if opcode.endswith("-done") or "[" in opcode:
+        return None
+    res = _SHAPE_RE.findall(head)
+    if not res:
+        return None
+    out_b = sum(_shape_bytes(d, dims)[0] for d, dims in res)
+    parts = tuple((d, _shape_bytes(d, dims)[1]) for d, dims in res)
+    mg = _GROUP_RE.search(line)
+    if mg:
+        n = len(mg.group(1).split(","))
+    else:
+        mg2 = _GROUP_V2_RE.search(line)
+        n = int(mg2.group(2)) if mg2 else 2
+    return CollectiveOp(
+        kind=f"unknown:{opcode}", dtype=parts[0][0], elems=sum(e for _, e in parts),
+        bytes=out_b, wire_bytes=0.0 if n <= 1 else float(out_b),
+        group_size=n, mult=1.0, name=md.group(1), computation=comp,
+        parts=parts)
+
+
 def parse_module(text: str) -> ModuleCosts:
     # ---- pass 1: split computations, collect result/param shapes ----------
     comps: dict[str, list[str]] = {}
@@ -158,6 +190,18 @@ def parse_module(text: str) -> ModuleCosts:
         for line in lines:
             mo = _OPCODE_RE.search(line)
             if not mo:
+                # catch-all: a replica-grouped instruction whose opcode the
+                # walker doesn't model (collective-broadcast, ragged
+                # all-to-all, ...).  Record it as ``unknown:<opcode>`` with
+                # conservative wire bytes (= result bytes) instead of
+                # silently under-counting — the wire lint turns these into
+                # ``wire.unknown_collective`` findings.
+                if "replica_groups=" in line:
+                    rec = _unknown_collective_record(line, name)
+                    if rec is not None:
+                        coll[rec.kind] += rec.wire_bytes
+                        counts[rec.kind] += 1
+                        coll_ops.append(rec)
                 continue
             op = mo.group(1)
             md = _DEF_RE.match(line)

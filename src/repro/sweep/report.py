@@ -73,6 +73,28 @@ def serving_row(rec: dict) -> dict:
     }
 
 
+def _analyze_col(spec_dict: dict) -> str:
+    """Overflow-proof summary recomputed from the SPEC at render time.
+
+    Deterministic host math (no store field, no tracing), so tables
+    regenerated from pre-existing stores gain the column without rerunning
+    any cell; the weakest accumulator across the cell's bit lattice is
+    shown with its headroom.
+    """
+    from repro.analyze.static_proofs import prove_spec
+    from repro.api.spec import RunSpec
+
+    records, findings = prove_spec(RunSpec.from_dict(spec_dict),
+                                   rules=("overflow",))
+    if findings:
+        return "**OVERFLOW**"
+    accum = [r for r in records if r["kind"] == "wire_accumulator"]
+    if not accum:
+        return "exact f32"
+    worst = min(accum, key=lambda r: r["headroom_bits"])
+    return f"{worst['dtype']} ok +{worst['headroom_bits']}b"
+
+
 def fl_row(rec: dict) -> dict:
     s, m = rec["spec"], rec["metrics"]
     return {
@@ -83,6 +105,7 @@ def fl_row(rec: dict) -> dict:
         "energy (J)": _f(m.get("total_energy_j"), "{:.2f}"),
         "time (s)": _f(m.get("total_time_s"), "{:.1f}"),
         "bits mix": ",".join(str(b) for b in m.get("bits_mix", [])) or "-",
+        "analyze": _analyze_col(s),
     }
 
 
@@ -98,6 +121,7 @@ def train_row(rec: dict) -> dict:
         "grad wire MB/round": _f(w.get("replicated_bytes_wire", 0) / 1e6,
                                  "{:.2f}"),
         "vs f32 wire": _f(w.get("wire_ratio"), "{:.2f}"),
+        "analyze": _analyze_col(s),
     }
 
 

@@ -423,3 +423,270 @@ class TestSessionAnalyze:
         # without the session policy silently dequantizes every weight
         assert all(f.rule != "precision.no_fastpath"
                    for f in serve_findings)
+
+
+# ---------------------------------------------------------------------------
+# reduce-scatter accumulator contract + unknown collectives (wire lint v2)
+# ---------------------------------------------------------------------------
+
+
+class TestReduceScatterLint:
+    def test_narrow_integer_reduce_scatter(self):
+        # wire_dtype(comm=8, n=4) = int16; s8 scattered sums overflow
+        found = lint_module(_mc(_rec("reduce-scatter", "s8", 4096)), _ctx())
+        assert [f.rule for f in found] == ["wire.narrow_reduce_scatter"]
+        assert found[0].severity == "error"
+
+    def test_wide_integer_reduce_scatter_warns(self):
+        found = lint_module(_mc(_rec("reduce-scatter", "s32", 4096)), _ctx())
+        assert [f.rule for f in found] == ["wire.wide_reduce_scatter"]
+        assert found[0].severity == "warn"
+
+    def test_matching_width_clean(self):
+        assert lint_module(
+            _mc(_rec("reduce-scatter", "s16", 4096)), _ctx()) == []
+
+    def test_float_reduce_scatter_is_the_fsdp_path(self):
+        # FSDP gradients reduce-scatter in f32 by design: never flagged
+        assert lint_module(
+            _mc(_rec("reduce-scatter", "f32", 4096)), _ctx()) == []
+
+
+class TestUnknownCollective:
+    def test_parser_emits_conservative_record(self):
+        mc = parse_module(_fixture("unknown_collective.txt"))
+        recs = [r for r in mc.collectives if r.kind.startswith("unknown:")]
+        assert len(recs) == 1
+        r = recs[0]
+        assert r.kind == "unknown:collective-broadcast"
+        assert r.dtype == "f32" and r.elems == 64 * 32
+        assert r.group_size == 4
+        # wire bytes = full result bytes: an over- but never under-count
+        assert r.wire_bytes == 64 * 32 * 4
+
+    def test_lint_flags_unknown_kind(self):
+        mc = parse_module(_fixture("unknown_collective.txt"))
+        found = [f for f in lint_module(mc, _ctx())
+                 if f.rule == "wire.unknown_collective"]
+        assert len(found) == 1
+        assert found[0].severity == "warn"
+        assert "collective-broadcast" in found[0].message
+
+    def test_known_fixture_has_no_unknown_records(self):
+        mc = parse_module(_fixture("allreduce_f32.txt"))
+        assert not any(r.kind.startswith("unknown:")
+                       for r in mc.collectives)
+
+
+# ---------------------------------------------------------------------------
+# analytic overflow / error-budget proofs (static_proofs)
+# ---------------------------------------------------------------------------
+
+
+class TestStaticProofs:
+    def test_every_comm_cell_in_both_presets_proves(self):
+        from repro.analyze.static_proofs import prove_spec
+        from repro.sweep.grid import get_preset
+
+        for name in ("grad-comm-wire", "fl-codesign-grid"):
+            for cell in get_preset(name).cells():
+                records, findings = prove_spec(cell.spec,
+                                               rules=("overflow",))
+                assert findings == [], (name, cell.label,
+                                        [f.format() for f in findings])
+                assert all(r["ok"] for r in records), (name, cell.label)
+
+    def test_seeded_negative_one_tier_too_narrow(self):
+        from repro.analyze.static_proofs import prove_wire_accumulator
+
+        # comm=8, n=4 needs int16; forcing int8 must fail the proof
+        proof, findings = prove_wire_accumulator(8, 4, force_dtype="int8")
+        assert not proof["ok"]
+        assert [f.rule for f in findings] == ["overflow.wire_accumulator"]
+        assert findings[0].severity == "error"
+        assert "int8" in findings[0].message
+
+    def test_headroom_matches_code_bound(self):
+        from repro.analyze.static_proofs import prove_wire_accumulator
+        from repro.dist.collectives import code_bound
+
+        proof, findings = prove_wire_accumulator(8, 4)
+        assert findings == [] and proof["ok"]
+        assert proof["worst_sum"] == 4 * code_bound(8) == 1020
+        assert proof["dtype"] == "int16"
+        # int16 capacity 32767 over 1020: 5 doublings fit
+        assert proof["headroom_bits"] == 5
+
+    def test_uncompressed_comm_is_trivially_exact(self):
+        from repro.analyze.static_proofs import prove_wire_accumulator
+
+        proof, findings = prove_wire_accumulator(32, 8)
+        assert findings == [] and proof["ok"]
+        assert proof["kind"] == "uncompressed"
+
+    def test_error_budget_accepts_default_policy(self):
+        from repro.analyze.static_proofs import check_error_budget
+        from repro.api.precision import PrecisionPolicy
+
+        rec, findings = check_error_budget(PrecisionPolicy(), 8)
+        assert findings == [], [f.format() for f in findings]
+        assert rec["ok"]
+
+    def test_error_budget_rejects_impossible_tolerance(self):
+        from repro.analyze.static_proofs import check_error_budget
+        from repro.api.precision import PrecisionPolicy
+
+        # a quantized policy (full precision has zero error by definition)
+        rec, findings = check_error_budget(PrecisionPolicy(weights=8), 8,
+                                           lam=1e-30)
+        assert not rec["ok"]
+        assert findings and all(f.rule == "precision.error_budget"
+                                for f in findings)
+        assert all(f.severity == "error" for f in findings)
+
+    def test_overflow_margin_table_renders(self):
+        from repro.analyze.static_proofs import overflow_margin_table
+
+        table = overflow_margin_table()
+        lines = table.splitlines()
+        assert lines[0].startswith("| sweep |")
+        assert len(lines) > 2
+        assert "**NO**" not in table      # every shipped cell proves
+        assert "grad-comm-wire" in table and "fl-codesign-grid" in table
+
+
+# ---------------------------------------------------------------------------
+# scalar-prefetch range checks (kernel.scalar_oob)
+# ---------------------------------------------------------------------------
+
+
+class TestScalarOperandCheck:
+    def _spec_with_scalar(self, values, lo, hi):
+        from repro.kernels.spec import ScalarOperand
+
+        op = BlockOperand("x", (8,), (8,), lambda i: (0,))
+        return KernelSpec(
+            name="k", source="test.py:k", grid=(1,),
+            inputs=(op,), outputs=(op,),
+            scalars=(ScalarOperand("page_table", np.asarray(values),
+                                   lo, hi, note="pool rows"),))
+
+    def test_in_range_values_clean(self):
+        spec = self._spec_with_scalar([0, 1, 2, -1], -1, 3)
+        assert [f for f in check_kernel_spec(spec)
+                if f.rule == "kernel.scalar_oob"] == []
+
+    def test_out_of_range_value_flagged(self):
+        spec = self._spec_with_scalar([0, 1, 7, -1], -1, 3)
+        found = [f for f in check_kernel_spec(spec)
+                 if f.rule == "kernel.scalar_oob"]
+        assert len(found) == 1
+        assert found[0].severity == "error"
+        assert "page_table" in found[0].message
+
+    def test_shipped_decode_spec_scalars_in_range(self):
+        specs = [s for s in shipped_kernel_specs() if s.scalars]
+        assert specs, "the paged decode spec must export scalar operands"
+        for spec in specs:
+            oob = [f for f in check_kernel_spec(spec)
+                   if f.rule == "kernel.scalar_oob"]
+            assert oob == [], [f.format() for f in oob]
+
+
+# ---------------------------------------------------------------------------
+# dead-allowlist detection + differential baseline gate
+# ---------------------------------------------------------------------------
+
+
+class TestDeadAllowlist:
+    def _f(self, rule="numerics.unguarded", key="ssm.py:ssm_block"):
+        return Finding(rule=rule, severity="warn", message="m", key=key)
+
+    def test_live_entry_not_flagged(self):
+        from repro.analyze.allowlist import dead_allowlist_findings
+
+        entries = [AllowEntry("numerics.*", "ssm.py:*", "why")]
+        assert dead_allowlist_findings([self._f()], entries) == []
+
+    def test_dead_entry_flagged_once(self):
+        from repro.analyze.allowlist import (dead_allowlist_findings,
+                                             dead_entries)
+
+        entries = [AllowEntry("numerics.*", "ssm.py:*", "why"),
+                   AllowEntry("precision.*", "gone.py:*", "stale")]
+        findings = [self._f()]
+        assert dead_entries(findings, entries) == [entries[1]]
+        out = dead_allowlist_findings(findings, entries, path="analyze.toml")
+        assert [f.rule for f in out] == ["meta.dead_allowlist"]
+        assert out[0].severity == "warn"
+        assert "gone.py:*" in out[0].message
+        assert out[0].where == "analyze.toml"
+
+    def test_no_entries_no_findings(self):
+        from repro.analyze.allowlist import dead_allowlist_findings
+
+        assert dead_allowlist_findings([self._f()], []) == []
+
+
+class TestBaselineGate:
+    def _f(self, rule="wire.f32_allreduce", key="train:step",
+           cell="dryrun:train_4k", where="a.py:10"):
+        return Finding(rule=rule, severity="error", message="m",
+                       key=key, cell=cell, where=where)
+
+    def test_identity_is_line_number_free(self):
+        from repro.analyze.baseline import finding_identity
+
+        a = self._f(where="a.py:10")
+        b = self._f(where="a.py:999")
+        assert finding_identity(a) == finding_identity(b)
+
+    def test_roundtrip_and_diff(self, tmp_path):
+        from repro.analyze.baseline import (diff_against_baseline,
+                                            load_baseline, write_baseline)
+
+        p = str(tmp_path / "base.json")
+        write_baseline([self._f()], p)
+        base = load_baseline(p)
+        # known finding filtered even if its line number moved
+        assert diff_against_baseline([self._f(where="a.py:999")], base) == []
+        new = self._f(key="train:other")
+        assert diff_against_baseline([new], base) == [new]
+
+    def test_write_merges_extra_identities(self, tmp_path):
+        from repro.analyze.baseline import load_baseline, write_baseline
+
+        p = str(tmp_path / "base.json")
+        write_baseline([self._f()], p)
+        first = load_baseline(p)
+        write_baseline([self._f(key="train:other")], p,
+                       extra_identities=first)
+        merged = load_baseline(p)
+        assert first < merged and len(merged) == 2
+
+    def test_committed_baseline_parses(self):
+        from repro.analyze.baseline import load_baseline
+
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(repo, "results", "analyze_baseline.json")
+        idents = load_baseline(path)
+        assert idents, "the committed baseline must not be empty"
+        assert all(len(i) == 3 for i in idents)
+
+
+class TestRuleSelection:
+    def test_normalize_accepts_iterables_and_strings(self):
+        from repro.analyze.runner import ALL_RULE_FAMILIES, normalize_rules
+
+        assert normalize_rules(None) is None     # None = every family
+        assert set(ALL_RULE_FAMILIES) == {"precision", "wire", "kernel",
+                                          "overflow", "numerics"}
+        assert normalize_rules("overflow,numerics") == frozenset(
+            {"overflow", "numerics"})
+        assert normalize_rules(("wire",)) == frozenset({"wire"})
+
+    def test_normalize_rejects_unknown_family(self):
+        from repro.analyze.runner import normalize_rules
+
+        with pytest.raises(ValueError, match="unknown rule"):
+            normalize_rules("overflow,typo")

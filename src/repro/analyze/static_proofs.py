@@ -187,8 +187,12 @@ def prove_spec(spec, *, rules=("overflow", "precision"), cell: str = ""):
     ``overflow`` covers the comm role (train / fl-orchestrate) and, for
     ``fl-sim``, every option of the policy's bit lattice — the scheme grid
     re-quantizes at whichever width GBD picks per round, so each must hold.
-    ``precision`` (the error budget) applies to the FL workloads, where the
-    spec's options carry the constraint-(23) constants.
+    A ``precision_program`` option widens the obligation to the program's
+    comm ENVELOPE (every wire width any schedule it emits can visit), so
+    one green analyze run certifies the whole adaptive run, not just the
+    base policy.  ``precision`` (the error budget) applies to the FL
+    workloads, where the spec's options carry the constraint-(23)
+    constants.
     """
     cell = cell or f"{spec.workload}:{spec.arch}"
     n = spec_n_clients(spec)
@@ -200,6 +204,15 @@ def prove_spec(spec, *, rules=("overflow", "precision"), cell: str = ""):
         if spec.workload == "fl-sim":
             bit_cells += [(f"policy.bit_options[{b}]", b)
                           for b in policy.bit_options]
+        prog_opt = spec.opt("precision_program")
+        if prog_opt is not None:
+            from repro.api.program import build_program
+
+            program = build_program(prog_opt)
+            seen = {b for _, b in bit_cells}
+            bit_cells += [(f"program.comm[{b}]", b)
+                          for b in program.comm_envelope(policy)
+                          if b not in seen]
         for key, bits in bit_cells:
             proof, fs = prove_wire_accumulator(bits, n, cell=cell, key=key)
             records.append(proof)

@@ -6,10 +6,22 @@
   (weights / grads / kv-cache / comm) spanning FL co-design and serving;
   ``PrecisionPolicy.from_gbd`` is how the optimizer's chosen bits enter
   the stack.
+* :class:`PrecisionProgram` — the per-round controller layer over the
+  policy (``constant`` / ``energy_budget`` / ``channel_gbd``): produces the
+  round's :class:`PrecisionPolicy` from measured state (energy spend,
+  channel drift, wire bytes, KV pool pressure).
 * :class:`Session` — owns mesh/AxisCtx/model/checkpoints and launches all
   five workload kinds (train, serve, dryrun, fl-sim, fl-orchestrate).
 """
 
 from repro.api.precision import PrecisionPolicy, ROLES  # noqa: F401
+from repro.api.program import (  # noqa: F401
+    ChannelGBDProgram,
+    ConstantProgram,
+    EnergyBudgetProgram,
+    Observation,
+    PrecisionProgram,
+    build_program,
+)
 from repro.api.session import ServeStats, Session  # noqa: F401
 from repro.api.spec import RunSpec, SIM_ARCHS, WORKLOADS  # noqa: F401

@@ -21,11 +21,20 @@ Per-workload ``options`` keys:
   ``eval_every``, ``quiet``, ``faults`` (a ``FaultPlan`` dict: deterministic
   fault injection + resilient rounds), ``resolve_drift_db``, ``ckpt_dir``,
   ``ckpt_every``.
+* any workload — ``precision_program`` (a :mod:`repro.api.program` kind name
+  or config dict): the per-round controller that turns measured state into
+  the round's :class:`PrecisionPolicy`.  The default ``constant`` program is
+  the identity — it reproduces the static-policy run bitwise.
 
 The ``train`` workload runs federated rounds at the spec's FIXED
 :class:`PrecisionPolicy`; ``fl-orchestrate`` is the paper's full loop — every
 round the GBD co-design emits a fresh per-device policy
 (``PrecisionPolicy.from_gbd``) that drives the same traced-delta train step.
+A non-constant ``precision_program`` sits between the two: the program may
+clamp the proposed policy round-by-round (energy budget tracking, channel
+drift re-solves, paged-KV pool demotion).  Compiled train steps are cached
+per compile-relevant policy key, so a schedule that visits K distinct comm
+bit-widths costs K compiles, not one per round.
 """
 
 from __future__ import annotations
@@ -72,6 +81,9 @@ class ServeStats:
                                      # (the anti-silent-clip guard firing)
     deferred_admissions: int = 0     # admissions that waited for page reclaim
     prompt_buckets: list = dataclasses.field(default_factory=list)
+    kv_demotions: int = 0            # f32 -> bf16 pool casts under pressure
+                                     # (precision_program kv_watermark)
+    kv_bits_final: int = 0           # KV element bits when the run ended
 
 
 def _weight_bytes(tree) -> int:
@@ -92,6 +104,14 @@ class Session:
     @functools.cached_property
     def policy(self) -> PrecisionPolicy:
         return self.spec.precision
+
+    @functools.cached_property
+    def program(self):
+        """The per-round precision controller (``precision_program`` option;
+        defaults to the identity ``constant`` program)."""
+        from repro.api.program import build_program
+
+        return build_program(self.spec.opt("precision_program"))
 
     @functools.cached_property
     def cfg(self):
@@ -162,23 +182,67 @@ class Session:
             nonfinite_grads=str(self.spec.opt("nonfinite_grads", "raise")))
 
     def comm_report(self) -> dict:
-        """Bytes-on-wire for one round's gradient reduction on this mesh.
+        """Bytes-on-wire for gradient reduction on this mesh, per round.
 
-        The accounting the sweep reporter publishes: replicated leaves move
+        The flat top-level keys are the BASE policy's one-round accounting
+        (the stable contract the analyzer's ``wire.comm_report_mismatch``
+        check and the sweep reporter read): replicated leaves move
         ``policy.comm``-bit codes through the SR-quantized all-reduce
         (:func:`repro.dist.collectives.quantized_psum_batch`), FSDP leaves
         reduce-scatter in f32.  Uses the same local parameter template and
         FSDP plan the compiled train step partitions with.
+
+        ``rounds`` adds one row per round with the comm bits that round
+        actually used — executed bits once rounds have run, otherwise the
+        static schedule (base policy every round) — so an adaptive
+        program's mixed-width schedule shows up row by row instead of being
+        averaged away.  ``program`` carries the controller's comm envelope
+        and the widest wire accumulator any member needs.
         """
-        from repro.dist.wire import grad_wire_report
+        from repro.dist.collectives import envelope_wire_dtype
+        from repro.dist.wire import grad_wire_report, grad_wire_rounds
         from repro.launch.mesh import batch_size, fsdp_size
         from repro.launch.steps import local_param_shapes
 
-        return grad_wire_report(
-            local_param_shapes(self.model, self.mesh, self.axes),
-            fsdp=fsdp_size(self.mesh, self.axes),
-            n_clients=max(batch_size(self.mesh, self.axes), 1),
-            comm_bits=self.policy.comm)
+        tree = local_param_shapes(self.model, self.mesh, self.axes)
+        fsdp = fsdp_size(self.mesh, self.axes)
+        n = max(batch_size(self.mesh, self.axes), 1)
+        rep = grad_wire_report(tree, fsdp=fsdp, n_clients=n,
+                               comm_bits=self.policy.comm)
+        bits_seq = self._executed_comm_bits()
+        if bits_seq is None:
+            bits_seq = [int(self.policy.comm)] * max(self.spec.rounds, 1)
+        rows = grad_wire_rounds(tree, fsdp=fsdp, n_clients=n,
+                                comm_bits_seq=bits_seq)
+        rep["rounds"] = rows
+        rep["total_bytes_wire"] = int(sum(r["replicated_bytes_wire"]
+                                          for r in rows))
+        rep["total_bytes_f32"] = int(sum(r["replicated_bytes_f32"]
+                                         for r in rows))
+        env = self.program.comm_envelope(self.policy)
+        dt = envelope_wire_dtype(env, n)
+        rep["program"] = {
+            "kind": self.program.kind,
+            "comm_envelope": [int(b) for b in env],
+            "envelope_wire_dtype": (np.dtype(dt).name if dt is not None
+                                    else "float32"),
+        }
+        return rep
+
+    def _executed_comm_bits(self) -> "list[int] | None":
+        """Per-round comm bits actually run so far, oldest first (None
+        before any round has executed)."""
+        st = self._train_state
+        if not st:
+            return None
+        orch = st.get("orch")
+        if orch is not None and orch.energy_log:
+            return [int(e.get("comm_bits", self.policy.comm))
+                    for e in orch.energy_log]
+        hist = st.get("history") or []
+        if hist and "comm_bits" in hist[0]:
+            return [int(h["comm_bits"]) for h in hist]
+        return None
 
     # -- primitive builders ---------------------------------------------
     def init_params(self, key=None):
@@ -256,6 +320,7 @@ class Session:
                                    model_dim_d=n_params,
                                    precision=self.policy, seed=spec.seed,
                                    faults=spec.opt("faults"),
+                                   program=spec.opt("precision_program"),
                                    resolve_drift_db=float(
                                        spec.opt("resolve_drift_db", 0.0))),
                 fleet, caps, grad_bytes=4.0 * n_params)
@@ -279,12 +344,53 @@ class Session:
                     # them, so the resumed trajectory is bit-identical
                     for r in range(start):
                         orch.plan_round(r)
+                else:
+                    # plain train: the session program is the only stateful
+                    # planner — replay its (deterministic, observation-
+                    # driven) decisions the same way
+                    for r in range(start):
+                        self.program.policy_for_round(
+                            r, self.policy, self._observe_train(r))
 
         self._train_state = dict(
             jax=jax, jnp=jnp, opt=opt, step=step, params=params,
             opt_state=opt_state, batcher=batcher, orch=orch,
-            n_clients=n_clients, B=B, start=start, history=[])
+            n_clients=n_clients, B=B, start=start, history=[],
+            step_cache={self.policy.grad_compression_bits: step},
+            energy_cum=0.0)
         return self._train_state
+
+    def _observe_train(self, r: int):
+        """Controller observation for the plain ``train`` workload (no
+        orchestrator energy model: cumulative spend is what the history
+        rows have recorded, 0.0 before any round runs)."""
+        from repro.api.program import Observation
+
+        st = self._train_state or {}
+        hist = st.get("history") or []
+        return Observation(
+            round=r, rounds_total=self.spec.rounds,
+            energy_cum_j=float(st.get("energy_cum", 0.0)),
+            energy_round_j=float(hist[-1]["energy_j"]) if hist else 0.0)
+
+    def _train_step_for(self, policy: PrecisionPolicy):
+        """Compiled train step for ``policy``, cached by its compile-relevant
+        key (the gradient wire width — weight bits flow through the traced
+        ``delta`` argument, so they never force a retrace).  A K-policy
+        schedule therefore costs K compiles, not one per round."""
+        from repro.launch.steps import build_train_step
+
+        st = self._ensure_train_state()
+        key = policy.grad_compression_bits
+        cache = st["step_cache"]
+        if key not in cache:
+            tc = dataclasses.replace(self.train_config(),
+                                     grad_compression_bits=key)
+            ts = build_train_step(self.model, self.mesh, self.axes,
+                                  st["opt"], tc, donate=False)
+            cache[key] = ts.fn(self.model.train_batch_spec(st["B"],
+                                                           self.spec.seq))
+        return cache[key]
 
     def fl_round(self, r: int) -> dict:
         """One federated round: per-round policy -> traced delta -> step.
@@ -300,7 +406,13 @@ class Session:
         n_clients, B = st["n_clients"], st["B"]
 
         plan = st["orch"].plan_round(r) if st["orch"] is not None else None
-        policy = plan["policy"] if plan is not None else self.policy
+        if plan is not None:
+            # the orchestrator already ran its own program over the GBD
+            # proposal — plan["policy"] is the round's final word
+            policy = plan["policy"]
+        else:
+            policy = self.program.policy_for_round(r, self.policy,
+                                                   self._observe_train(r))
         bits = policy.bits_vector(n_clients)
 
         raw = st["batcher"].sample_round(r, n_clients, spec.batch)
@@ -315,12 +427,14 @@ class Session:
             batch["frames"] = jnp.zeros((B, spec.seq, cfg.d_frontend),
                                         jnp.float32)
         delta = policy.delta(n_clients)
+        step = self._train_step_for(policy)
         t0 = time.time()
-        st["params"], st["opt_state"], m = st["step"](
+        st["params"], st["opt_state"], m = step(
             st["params"], st["opt_state"], batch, delta,
             jax.random.fold_in(jax.random.PRNGKey(spec.seed), r))
         rec = {"round": r, "loss": float(m["loss"]),
                "bits": bits.tolist(),
+               "comm_bits": int(policy.comm),
                "energy_j": plan["energy_round"] if plan else 0.0,
                "t_round_s": plan["t_round"] if plan else 0.0,
                "wall_s": round(time.time() - t0, 3),
@@ -331,6 +445,7 @@ class Session:
                        undelivered=plan["undelivered"],
                        dropped_midround=plan["dropped_midround"])
         st["history"].append(rec)
+        st["energy_cum"] += float(rec["energy_j"])
         if self.ckpt:
             extra = {"round": r + 1}
             orch = st["orch"]
@@ -567,6 +682,10 @@ class Session:
                                                 jnp.float32)
             return b
 
+        kv_bits = 16 if policy.kv_cache_dtype() == jnp.bfloat16 else 32
+        kv_demotions = 0
+        pool_pressure = 0.0
+
         # ---- slot state (host side) -------------------------------------
         active = np.zeros((batch,), bool)
         remaining = np.zeros((batch,), np.int64)
@@ -583,7 +702,7 @@ class Session:
             return min(req["prompt_len"] + req["max_new"], s_max)
 
         def admit():
-            nonlocal caches, cur_tok, admitted
+            nonlocal caches, cur_tok, admitted, pool_pressure
             free = [i for i in range(batch) if not active[i]]
             fill = []
             if pager is None:
@@ -615,6 +734,10 @@ class Session:
                     fill.append((slot, req))
                 for qi in sorted(take, reverse=True):
                     queue.pop(qi)
+                # watermark signal: a page-blocked admission saturates the
+                # pressure (the pool is effectively full for the queue even
+                # if a few pages remain free)
+                pool_pressure = 1.0 if blocked else pager.pool.pressure
             if not fill:
                 return
             if pager is not None:
@@ -647,7 +770,28 @@ class Session:
                     admitted += 1
             cur_tok = jnp.asarray(new_tok)
 
+        def maybe_demote_kv():
+            """f32 -> bf16 pool demotion when paged-KV pressure crosses the
+            program's watermark (a one-way ratchet; the jitted decode step
+            retraces once on the narrower cache dtype)."""
+            nonlocal caches, kv_bits, kv_demotions
+            if pager is None or kv_bits <= 16:
+                return
+            from repro.api.program import Observation
+
+            obs = Observation(round=admitted, pool_pressure=pool_pressure)
+            if self.program.kv_demote(obs):
+                from repro.models.attention import demote_kv_cache
+
+                caches = demote_kv_cache(caches, jnp.bfloat16)
+                kv_bits = 16
+                kv_demotions += 1
+                say(f"kv cache: pool pressure {pool_pressure:.2f} >= "
+                    f"watermark {self.program.kv_watermark} -> demoted "
+                    "f32 pools to bf16")
+
         admit()
+        maybe_demote_kv()
         # first call compiles; its output is a real decode step, consumed below
         tok, caches = ss.fn(qparams, {"token": cur_tok}, caches)
         tok_h = np.asarray(tok)               # sync: compile finishes here
@@ -689,6 +833,7 @@ class Session:
             if done_any and queue:
                 admit()                       # mid-flight slot reuse: overwrites
                                               # the admitted slots in cur_tok
+                maybe_demote_kv()
             tok, caches = ss.fn(qparams, {"token": cur_tok}, caches)
             tok_h = np.asarray(tok)
             step_i += 1
@@ -708,6 +853,8 @@ class Session:
             capacity_stops=capacity_stops,
             deferred_admissions=len(deferred_ids),
             prompt_buckets=sorted(pf_cache),
+            kv_demotions=kv_demotions,
+            kv_bits_final=kv_bits,
         )
         say(f"decoded {stats.decoded_tokens} tokens over {stats.decode_steps} "
             f"steps x {batch} slots in {wall:.3f}s = {stats.tok_s:.1f} tok/s "
@@ -973,6 +1120,7 @@ class Session:
                 error_tolerance=float(o.get("error_tolerance", 4.5)),
                 precision=self.policy, seed=seed,
                 faults=o.get("faults"),
+                program=o.get("precision_program"),
                 resolve_drift_db=float(o.get("resolve_drift_db", 0.0)),
                 ckpt_dir=str(o.get("ckpt_dir", "")),
                 ckpt_every=int(o.get("ckpt_every", 10))),

@@ -187,6 +187,22 @@ def wire_dtype(bits: int, n_clients: int):
         "safe below 32768 clients) or use 32 (uncompressed)")
 
 
+def envelope_wire_dtype(bits_options, n_clients: int):
+    """Widest accumulator ANY bit-width in an adaptive program's comm
+    envelope needs, or ``None`` when the whole envelope is uncompressed.
+
+    Calls :func:`wire_dtype` on every compressed member, so it raises if any
+    round of any schedule the program can emit would overflow the int32
+    accumulator — proving the envelope proves the whole run.
+    """
+    compressed = [b for b in sorted({int(b) for b in bits_options})
+                  if b < FULL_PRECISION_BITS]
+    if not compressed:
+        return None
+    dts = [wire_dtype(b, n_clients) for b in compressed]
+    return max(dts, key=lambda d: jnp.dtype(d).itemsize)
+
+
 def _nonfinite_guard(gf, on_nonfinite: str, ax=()):
     """Keep NaN/Inf gradients out of the wire quantizer.
 

@@ -70,3 +70,47 @@ def grad_wire_report(params_tree, *, fsdp: int, n_clients: int,
         "fsdp_reduce_scatter_bytes": int(fsdp_elems * 4),
         "wire_ratio": wire_bytes / max(f32_bytes, 1),
     }
+
+
+def wire_scale(comm_bits: int, n_clients: int) -> float:
+    """Fraction of the f32 payload that crosses the wire at ``comm_bits``.
+
+    The SR all-reduce ships codes at :func:`wire_dtype`'s itemsize, so the
+    factor is ``itemsize / 4`` (exactly ``1.0`` when uncompressed — callers
+    that multiply a static f32 payload by it stay bit-identical).  The
+    fault executor bills retransmissions against this scaled payload, which
+    is how an adaptive program's comm demotion shows up as measured energy
+    savings under packet loss.
+    """
+    if int(comm_bits) >= FULL_PRECISION_BITS:
+        return 1.0
+    return np.dtype(wire_dtype(comm_bits, n_clients)).itemsize / 4.0
+
+
+def grad_wire_rounds(params_tree, *, fsdp: int, n_clients: int,
+                     comm_bits_seq) -> list[dict]:
+    """Per-round wire rows for a (possibly adaptive) comm-bit schedule.
+
+    One row per round: the round index, its executed ``comm`` bits, and the
+    :func:`grad_wire_report` byte accounting at those bits.  Distinct
+    bit-widths are computed once and reused, so a K-policy schedule costs K
+    tree walks, not R.
+    """
+    cache: dict[int, dict] = {}
+    rows = []
+    for r, bits in enumerate(comm_bits_seq):
+        bits = int(bits)
+        if bits not in cache:
+            cache[bits] = grad_wire_report(params_tree, fsdp=fsdp,
+                                           n_clients=n_clients,
+                                           comm_bits=bits)
+        rep = cache[bits]
+        rows.append({
+            "round": r,
+            "comm_bits": bits,
+            "wire_dtype": rep["wire_dtype"],
+            "replicated_bytes_wire": rep["replicated_bytes_wire"],
+            "replicated_bytes_f32": rep["replicated_bytes_f32"],
+            "wire_ratio": rep["wire_ratio"],
+        })
+    return rows

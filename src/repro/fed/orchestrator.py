@@ -22,12 +22,12 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import warnings
 from typing import Callable
 
 import numpy as np
 
 from repro.api.precision import PrecisionPolicy
+from repro.api.program import Observation, PrecisionProgram, build_program
 from repro.ckpt import CheckpointManager
 from repro.core import baselines as baselines_mod
 from repro.core.channel import ChannelModel, gain_drift_db
@@ -52,7 +52,6 @@ class OrchestratorConfig:
     n_rounds: int
     scheme: str = "fwq"              # fwq | full_precision | unified_q | rand_q
     precision: PrecisionPolicy | None = None  # bit lattice + tensor roles
-    bits_options: tuple | None = None         # DEPRECATED: use precision
     unified_bits: int = 16
     b_max_hz: float = 20e6
     t_max_s: float = 0.0             # 0 => auto (t_factor x min feasible)
@@ -70,26 +69,16 @@ class OrchestratorConfig:
     faults: FaultPlan | dict | None = None  # seeded fault injection plan
     resolve_drift_db: float = 0.0    # warm re-solve when measured gains drift
     #                                  past this (dB, 0 => disabled)
+    program: "PrecisionProgram | dict | str | None" = None
+    #                                  per-round precision controller
+    #                                  (repro.api.program); None = constant
 
     def __post_init__(self):
         if isinstance(self.faults, dict):
             self.faults = FaultPlan.from_dict(self.faults)
-        if self.bits_options is not None:
-            warnings.warn(
-                "OrchestratorConfig(bits_options=...) is deprecated; pass "
-                "precision=PrecisionPolicy(bit_options=...)",
-                DeprecationWarning, stacklevel=3)
-            if (self.precision is not None
-                    and tuple(self.precision.bit_options)
-                    != tuple(self.bits_options)):
-                raise ValueError(
-                    f"conflicting bits_options={tuple(self.bits_options)} and "
-                    f"precision.bit_options={self.precision.bit_options}")
-            base = self.precision or PrecisionPolicy()
-            self.precision = dataclasses.replace(
-                base, bit_options=tuple(self.bits_options))
         if self.precision is None:
             self.precision = PrecisionPolicy()
+        self.program = build_program(self.program)
 
 
 class FLOrchestrator:
@@ -114,7 +103,11 @@ class FLOrchestrator:
         self._p_comp = np.array([d.runtime_power() for d in fleet])
         self._p_comm = np.array([d.p_comm for d in fleet])
         self._strategy: dict | None = None
+        self.program: PrecisionProgram = cfg.program
         self.energy_log: list[dict] = []
+        self._energy_cum = 0.0    # running sum of energy_log rounds: the
+        #                           controller observation (O(1) per round,
+        #                           rebuilt identically on resume replay)
         self.ckpt = (CheckpointManager(cfg.ckpt_dir, every=cfg.ckpt_every)
                      if cfg.ckpt_dir else None)
         self.faults = (cfg.faults.schedule(cfg.seed, cfg.n_devices)
@@ -184,6 +177,15 @@ class FLOrchestrator:
                           "warm": bool(warm)}
         return self._strategy
 
+    def observe(self, round_idx: int, drift: float = 0.0) -> Observation:
+        """The measured state the precision program decides from."""
+        last = self.energy_log[-1] if self.energy_log else None
+        return Observation(
+            round=round_idx, rounds_total=self.cfg.n_rounds,
+            energy_cum_j=self._energy_cum,
+            energy_round_j=float(last["energy_round"]) if last else 0.0,
+            gain_drift_db=float(drift))
+
     # ------------------------------------------------------------------
     def plan_round(self, round_idx: int) -> dict:
         """Strategy + cohort survival for this round.
@@ -193,6 +195,12 @@ class FLOrchestrator:
         active the round is *executed* against the realized faults: faded
         gains, throttled compute, and a per-client retransmission loop whose
         every attempt is billed real transmit energy.
+
+        The proposed strategy (cadence / drift re-solved GBD or baseline)
+        passes through ``cfg.program.policy_for_round`` before any energy is
+        modeled, so an adaptive controller's bit clamps feed the same
+        ``e_comp = p_comp (beta1 + beta2 q)`` bookkeeping the static path
+        uses.  The default constant program returns the proposal unchanged.
         """
         rf = (self.faults.round_faults(round_idx)
               if self.faults is not None else None)
@@ -207,13 +215,20 @@ class FLOrchestrator:
             self.resolve(round_idx,
                          gains0=eff_gains if rf is not None else None)
             resolved = True
-        elif self.cfg.resolve_drift_db > 0:
+        elif self.cfg.resolve_drift_db > 0 or self.program.uses_drift:
             drift = gain_drift_db(self._strategy["gains0"], eff_gains)
-            if drift > self.cfg.resolve_drift_db:
+            legacy = (self.cfg.resolve_drift_db > 0
+                      and drift > self.cfg.resolve_drift_db)
+            if legacy or self.program.wants_resolve(
+                    self.observe(round_idx, drift)):
                 self.resolve(round_idx, warm=True, gains0=eff_gains)
                 resolved = True
         st = self._strategy
-        q = st["q"]
+        # the controller's round decision: clamp/keep the proposed policy
+        policy = self.program.policy_for_round(
+            round_idx, st["policy"], self.observe(round_idx, drift))
+        q = (st["q"] if policy is st["policy"]
+             else policy.bits_vector(self.cfg.n_devices))
         h = self._strategy["resolved_at"]
         B = st["bandwidth"][min(round_idx - h, st["bandwidth"].shape[0] - 1)]
         a1, a2 = alpha_coefficients(eff_gains, self._p_comm, self.comm)
@@ -237,8 +252,9 @@ class FLOrchestrator:
             if not cohort.any():        # never lose the round entirely
                 cohort = alive if alive.any() else np.ones_like(alive)
             rec = {
-                "round": round_idx, "policy": st["policy"],
-                "q": q.copy(), "bandwidth": B.copy(),
+                "round": round_idx, "policy": policy,
+                "q": q.copy(), "comm_bits": int(policy.comm),
+                "bandwidth": B.copy(),
                 "t_comp": t_comp, "t_comm": t_comm,
                 "t_round": float(np.max(np.where(cohort, t_total, 0.0))),
                 "e_comp": e_comp, "e_comm": e_comm,
@@ -248,12 +264,13 @@ class FLOrchestrator:
             }
         else:
             rec = self._execute_faulty_round(
-                round_idx, rf, st, q, B, eff_gains, alive, deadline,
+                round_idx, rf, policy, q, B, eff_gains, alive, deadline,
                 t_comp, t_comm, e_comp, e_comm, drift, resolved)
         self.energy_log.append(rec)
+        self._energy_cum += rec["energy_round"]
         return rec
 
-    def _execute_faulty_round(self, round_idx, rf, st, q, B, eff_gains,
+    def _execute_faulty_round(self, round_idx, rf, policy, q, B, eff_gains,
                               alive, deadline, t_comp, t_comm, e_comp,
                               e_comm, drift, resolved) -> dict:
         """Realize one round under faults: who delivers, and at what cost.
@@ -263,9 +280,15 @@ class FLOrchestrator:
         uplink pays for each transmission attempt — delivered or not.
         ``e_comm`` stays the lossless plan; ``e_comm_actual`` is the bill.
         """
+        from repro.dist.wire import wire_scale
+
         n = self.cfg.n_devices
         plan = self.faults.plan
-        payload_bits = 8.0 * self.comm.grad_bytes
+        # the uplink carries the SR-compressed payload: comm demotion (an
+        # adaptive program's lever) shrinks every retransmission attempt.
+        # wire_scale is exactly 1.0 at comm=32, so static runs are untouched.
+        payload_bits = (8.0 * self.comm.grad_bytes
+                        * wire_scale(int(policy.comm), n))
         rate = reference_rate_bps(B, eff_gains, self._p_comm, self.comm)
 
         delivered = np.zeros(n, dtype=bool)
@@ -301,8 +324,9 @@ class FLOrchestrator:
         # uplink attempts are billed whether or not they delivered
         billed = float(np.sum(np.where(alive, e_comp, 0.0)) + e_comm_act.sum())
         return {
-            "round": round_idx, "policy": st["policy"],
-            "q": q.copy(), "bandwidth": B.copy(),
+            "round": round_idx, "policy": policy,
+            "q": q.copy(), "comm_bits": int(policy.comm),
+            "bandwidth": B.copy(),
             "t_comp": t_comp, "t_comm": t_comm,
             "t_round": float(np.max(t_active)) if t_active.size else 0.0,
             "e_comp": e_comp, "e_comm": e_comm,
@@ -320,7 +344,7 @@ class FLOrchestrator:
             "fade_db": rf.fade_db.copy(),
             "drift_db": float(drift),
             "resolved": bool(resolved),
-            "warm_resolve": bool(st.get("warm", False)),
+            "warm_resolve": bool(self._strategy.get("warm", False)),
             "forced_cohort": forced,
         }
 
@@ -359,7 +383,8 @@ class FLOrchestrator:
                                for i in cohort_idx),
                     gate_factor=self.faults.plan.gate_norm_factor)
             # elastic cohort: the simulator round is sized by the batch
-            rec = sim.run_round(batch, bits, faults=upd)
+            rec = sim.run_round(batch, bits, faults=upd,
+                                comm_bits=plan["comm_bits"])
             rec.update(energy=plan["energy_round"], t_round=plan["t_round"],
                        cohort_size=len(cohort_idx))
             if upd is not None:
@@ -377,6 +402,11 @@ class FLOrchestrator:
         out = {"history": sim.history, "energy_log": self.energy_log,
                "evals": evals, "total_energy_j": total_energy,
                "total_time_s": total_time}
+        prog = self.program.summary()
+        if prog.get("kind", "constant") != "constant":
+            if "budget_j" in prog:
+                prog["within_budget"] = total_energy <= prog["budget_j"]
+            out["program"] = prog
         if self.faults is not None:
             out.update(
                 total_retransmissions=int(sum(

@@ -63,7 +63,8 @@ class FLSimulation:
         self.params, self.opt_state = state["params"], state["opt"]
         self.round_idx = round_idx
 
-    def run_round(self, batch, bits, *, faults: UpdateFaults | None = None) -> dict:
+    def run_round(self, batch, bits, *, faults: UpdateFaults | None = None,
+                  comm_bits: int | None = None) -> dict:
         """batch: leaves with leading dim n_clients; bits: (n_clients,) ints
         or a :class:`repro.api.precision.PrecisionPolicy` whose weights role
         covers exactly this round's cohort.
@@ -73,8 +74,16 @@ class FLSimulation:
         aggregation gate (finite check + relative norm bound) -> masked
         server step.  ``faults=None`` is the legacy single-jit round,
         bit-identical to before the gate existed.
+
+        ``comm_bits`` records this round's gradient wire bit-width in the
+        history row (adaptive programs change it mid-run, so per-round
+        truth lives in the rows, not the spec); it does not change the
+        simulator's math — the vmap round aggregates in full precision per
+        Algorithm 1, wire compression is the pod trainer's concern.
         """
         if hasattr(bits, "bits_vector"):  # PrecisionPolicy
+            if comm_bits is None:
+                comm_bits = int(bits.comm)
             n = jax.tree_util.tree_leaves(batch)[0].shape[0]
             if bits.heterogeneous and len(bits.weights) != n:
                 # a device-indexed policy cannot be positionally mapped onto
@@ -99,6 +108,8 @@ class FLSimulation:
             }
         else:
             rec = self._run_gated_round(batch, delta, rng, bits, faults)
+        if comm_bits is not None:
+            rec["comm_bits"] = int(comm_bits)
         self.history.append(rec)
         self.round_idx += 1
         return rec

@@ -33,6 +33,11 @@ def main(argv=None):
     ap.add_argument("--resolve-drift-db", type=float, default=0.0,
                     help="warm GBD re-solve when measured gains drift past "
                     "this many dB (0 = disabled)")
+    ap.add_argument("--precision-program", default="",
+                    help="adaptive precision controller: a kind name "
+                    "(constant | energy_budget | channel_gbd) or a JSON "
+                    'config, e.g. \'{"kind": "energy_budget", '
+                    '"budget_j": 120}\'')
     ap.add_argument("--ckpt-dir", default="",
                     help="round-level checkpoints; rerunning with the same "
                     "dir resumes bit-identically")
@@ -49,6 +54,10 @@ def main(argv=None):
         options["faults"] = json.loads(args.faults)
     if args.resolve_drift_db:
         options["resolve_drift_db"] = args.resolve_drift_db
+    if args.precision_program:
+        pp = args.precision_program
+        options["precision_program"] = (json.loads(pp)
+                                        if pp.lstrip().startswith("{") else pp)
     if args.ckpt_dir:
         options["ckpt_dir"] = args.ckpt_dir
         options["ckpt_every"] = args.ckpt_every
@@ -63,6 +72,8 @@ def main(argv=None):
               f"{str(sorted(set(h['bits'].tolist()))):>16}")
     print(f"\ntotal energy: {out['total_energy_j']:.2f} J over "
           f"{out['total_time_s']:.1f} s (simulated wall time)")
+    if "program" in out:
+        print("precision program:", json.dumps(out["program"]))
     if "total_retransmissions" in out:
         print(f"faults: {out['total_retransmissions']} retransmissions "
               f"({out['total_retx_energy_j']:.3f} J), "

@@ -78,6 +78,12 @@ class PagePool:
     def used_pages(self) -> int:
         return self.n_pages - len(self._free)
 
+    @property
+    def pressure(self) -> float:
+        """Fraction of the pool in use (0..1) — the adaptive-precision
+        programs' paged-KV watermark signal."""
+        return self.used_pages / max(self.n_pages, 1)
+
     def alloc(self, n: int) -> list[int] | None:
         """n pool rows, or None (allocate-all-or-nothing) when exhausted."""
         if n > len(self._free):

@@ -28,6 +28,7 @@ def run_serve(arch: str, *, smoke: bool = True, steps: int = 32, batch: int = 4,
               requests: int | None = None, max_new: int | None = None,
               kv_layout: str | None = None, page_size: int | None = None,
               pool_pages: int | None = None, vary_prompt: bool = False,
+              precision_program=None, kv_bits: int = 32,
               quiet: bool = False) -> ServeStats:
     """Compatibility wrapper: builds a RunSpec and drives ``Session.serve``.
 
@@ -38,11 +39,18 @@ def run_serve(arch: str, *, smoke: bool = True, steps: int = 32, batch: int = 4,
     attention families) serves from the paged KV cache: ``pool_pages`` pages
     of ``page_size`` tokens shared across slots, allocated per request on
     admit and reclaimed on completion.
+
+    ``precision_program`` (a kind name or config dict, see
+    :mod:`repro.api.program`) plus ``kv_bits=32`` arms the paged-KV
+    watermark: an f32 cache pool is demoted to bf16 when pool pressure
+    crosses the program's ``kv_watermark``.
     """
     from repro.api import PrecisionPolicy, RunSpec, Session
 
-    precision = (PrecisionPolicy(weights=serve_bits, lazy=True)
-                 if serve_bits < 32 else PrecisionPolicy.full_precision())
+    precision = (PrecisionPolicy(weights=serve_bits, lazy=True,
+                                 kv_cache=kv_bits)
+                 if serve_bits < 32
+                 else PrecisionPolicy.full_precision(kv_cache=kv_bits))
     options = {"steps": steps, "s_max": s_max, "prompt_len": prompt_len,
                "attn_impl": attn_impl, "requests": requests,
                "max_new": max_new, "quiet": quiet}
@@ -54,6 +62,8 @@ def run_serve(arch: str, *, smoke: bool = True, steps: int = 32, batch: int = 4,
         options["pool_pages"] = pool_pages
     if vary_prompt:
         options["vary_prompt"] = True
+    if precision_program is not None:
+        options["precision_program"] = precision_program
     spec = RunSpec(
         arch=arch, workload="serve", mesh=mesh, smoke=smoke, seed=seed,
         batch=batch, seq=s_max, precision=precision, options=options)
@@ -90,14 +100,28 @@ def main(argv=None):
     ap.add_argument("--vary-prompt", action="store_true",
                     help="draw ragged prompt lengths (exercises the "
                     "prompt-length buckets)")
+    ap.add_argument("--kv-bits", type=int, choices=(16, 32), default=32,
+                    help="KV-cache storage: 32 = f32, 16 = bf16")
+    ap.add_argument("--precision-program", default="",
+                    help="adaptive precision controller (kind name or JSON "
+                    "config); with --kv-bits 32 and a kv_watermark, paged "
+                    "pools demote f32 -> bf16 under pool pressure, e.g. "
+                    '\'{"kind": "constant", "kv_watermark": 0.9}\'')
     args = ap.parse_args(argv)
+    program = None
+    if args.precision_program:
+        import json
+
+        pp = args.precision_program
+        program = json.loads(pp) if pp.lstrip().startswith("{") else pp
     return run_serve(
         args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
         s_max=args.s_max, prompt_len=args.prompt_len,
         serve_bits=args.serve_bits, attn_impl=args.attn_impl, mesh=args.mesh,
         seed=args.seed, requests=args.requests, max_new=args.max_new,
         kv_layout=args.kv_layout, page_size=args.page_size,
-        pool_pages=args.pool_pages, vary_prompt=args.vary_prompt)
+        pool_pages=args.pool_pages, vary_prompt=args.vary_prompt,
+        precision_program=program, kv_bits=args.kv_bits)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Any
 
 import jax
@@ -37,23 +36,6 @@ _batch_size = batch_size
 
 def _compute_dtype(cfg: ModelConfig):
     return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
-
-
-def _resolve_policy(policy, lazy_quant):
-    """Fold the deprecated ``lazy_quant=`` knob into a PrecisionPolicy."""
-    if lazy_quant is None:
-        return policy
-    warnings.warn(
-        "lazy_quant= is deprecated; pass policy=PrecisionPolicy(..., lazy=True)",
-        DeprecationWarning, stacklevel=3)
-    if policy is not None:
-        if bool(policy.lazy) != bool(lazy_quant):
-            raise ValueError("conflicting lazy_quant= and policy.lazy")
-        return policy
-    from repro.api.precision import PrecisionPolicy
-
-    return (PrecisionPolicy.lazy_int8() if lazy_quant
-            else PrecisionPolicy.full_precision())
 
 
 def build_init_fn(model: Model, mesh, axes: AxisCtx):
@@ -260,7 +242,7 @@ def _cache_kwargs(page_size, pool_pages) -> dict:
 
 def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
                       params_tree=None, s_max: int, batch_global: int,
-                      policy=None, lazy_quant: bool | None = None,
+                      policy=None,
                       page_size: int | None = None,
                       pool_pages: int | None = None, attn_impl: str = "ref"):
     """One-token decode step (greedy sampling over vocab-parallel logits).
@@ -268,7 +250,6 @@ def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
     ``policy`` (:class:`repro.api.precision.PrecisionPolicy`): with
     ``policy.lazy``, packed ``QTensor`` weights stay int8 through the matmuls
     (quant_matmul kernel dispatch) instead of being dequantized on use.
-    ``lazy_quant`` is the deprecated boolean form.
 
     ``page_size`` switches the KV caches to the PAGED layout (shared
     per-shard pool of ``pool_pages`` pages + per-slot page tables —
@@ -276,7 +257,6 @@ def build_decode_step(model: Model, mesh, axes: AxisCtx, *,
     then routes decode attention through the batched flash-decode Pallas
     kernel instead of the (bitwise slab-equivalent) gather reference.
     """
-    policy = _resolve_policy(policy, lazy_quant)
     cfg = model.cfg
     tp = _size(mesh, axes.model_axis)
     fsdp = _fsdp_size(mesh, axes)
@@ -357,7 +337,7 @@ def init_global_caches(model: Model, mesh, axes: AxisCtx, *, s_max: int,
 def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
                          params_tree=None, s_max: int, s_prompt: int,
                          batch_global: int, attn_impl: str = "auto",
-                         policy=None, lazy_quant: bool | None = None,
+                         policy=None,
                          bos_id: int = 1, page_size: int | None = None,
                          pool_pages: int | None = None,
                          with_prompt_lens: bool = False):
@@ -379,7 +359,6 @@ def build_cached_prefill(model: Model, mesh, axes: AxisCtx, *,
     bucket keep their true per-slot lengths (cache stamps, last-position
     logits), which is what makes one compiled prefill serve a whole bucket.
     """
-    policy = _resolve_policy(policy, lazy_quant)
     cfg = model.cfg
     tp = _size(mesh, axes.model_axis)
     fsdp = _fsdp_size(mesh, axes)

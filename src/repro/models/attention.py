@@ -296,6 +296,28 @@ def init_paged_kv_cache(batch: int, s_max: int, dims: AttnDims,
                         jnp.zeros((batch,), jnp.int32))
 
 
+def demote_kv_cache(caches, dtype):
+    """Cast every KV cache's key/value storage to ``dtype`` mid-run.
+
+    Page tables and per-slot lengths are preserved, so a serving driver can
+    demote a pressured f32 pool to bf16 without disturbing admissions —
+    the jitted decode step simply retraces on the new cache dtype.
+    """
+    import jax
+
+    def _one(c):
+        if isinstance(c, PagedKVCache):
+            return c._replace(k_pages=c.k_pages.astype(dtype),
+                              v_pages=c.v_pages.astype(dtype))
+        if isinstance(c, KVCache):
+            return c._replace(k=c.k.astype(dtype), v=c.v.astype(dtype))
+        return c
+
+    return jax.tree_util.tree_map(
+        _one, caches,
+        is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache)))
+
+
 def _check_prompt_fits(S_p: int, S_loc: int, dims: AttnDims) -> None:
     S_glob = S_loc * (dims.tp if kv_cache_seq_parallel(dims) else 1)
     if S_p > S_glob:

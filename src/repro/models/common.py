@@ -17,7 +17,6 @@ over the whole mesh.  The two cross-cutting concerns are factored here:
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable
 
 import jax
@@ -133,9 +132,6 @@ class ParamCtx:
     :func:`repro.kernels.ops.dense_dispatch`, so dequantization happens
     tile-by-tile inside the ``quant_matmul`` kernel and the weight stream
     stays int8 all the way from HBM to VMEM.
-
-    ``lazy_quant``: DEPRECATED boolean form of ``policy.lazy`` — still honored
-    (with a warning) so pre-facade callers keep working.
     """
 
     ctx: AxisCtx
@@ -143,20 +139,10 @@ class ParamCtx:
     compute_dtype: Any = jnp.bfloat16
     sp: bool = False
     gather_dtype: Any = None
-    lazy_quant: bool | None = None
     policy: Any = None
-
-    def __post_init__(self):
-        if self.lazy_quant is not None:
-            warnings.warn(
-                "ParamCtx(lazy_quant=...) is deprecated; pass "
-                "policy=PrecisionPolicy(..., lazy=True) or use "
-                "ParamCtx.from_policy(...)", DeprecationWarning, stacklevel=3)
 
     @property
     def lazy(self) -> bool:
-        if self.lazy_quant is not None:
-            return bool(self.lazy_quant)
         return bool(getattr(self.policy, "lazy", False))
 
     @classmethod
@@ -176,7 +162,7 @@ class ParamCtx:
         """Gather + transform + cast: the single funnel every weight goes through.
 
         Returns a dense array, or the packed :class:`QTensor` (codes gathered)
-        when ``lazy_quant`` is on — consumers dispatch on the leaf type.
+        when ``policy.lazy`` is on — consumers dispatch on the leaf type.
         """
         nd = (w.codes if isinstance(w, QTensor) else w).ndim
         dim = fsdp_shard_dim(path, nd) if gathered_dim is None else gathered_dim

@@ -238,6 +238,40 @@ def preset_fl_fault_grid(rounds: int = 24, n_clients: int = 6,
               Axis("options.faults", (None, mild, severe))))
 
 
+def preset_fl_adaptive_grid(rounds: int = 24, n_clients: int = 6,
+                            arch: str = "resnet",
+                            budget_j: float = 430.0) -> Sweep:
+    """Adaptive precision program vs static fwq, with and without faults.
+
+    2x2 grid: fault level (none / severe, the ``fl-fault-grid`` severe
+    preset) x precision program (static GBD policy / ``energy_budget``
+    controller).  The budget is set between the measured no-fault and
+    severe-fault static totals, so the adaptive cells tell the paper's
+    story: under faults the static co-design OVERSHOOTS the budget (it
+    never sees the retransmission bill), while the controller demotes
+    weight/comm bits as cumulative measured energy tracks over pace and
+    finishes within it.  The fault-free cells double as a no-regression
+    check — under budget the controller never clamps, so its cell matches
+    the static one.
+    """
+    severe = {"dropout_prob": 0.15, "fade_prob": 0.3, "packet_loss": 0.2,
+              "corrupt_prob": 0.1, "slowdown_prob": 0.1}
+    # restore below the default 0.90: the severe-fault spend sits close to
+    # pace, and a quick restore oscillates demote/restore and lands over
+    # budget — holding demotions until spend is clearly under keeps it in
+    program = {"kind": "energy_budget", "budget_j": budget_j,
+               "restore": 0.75}
+    return Sweep(
+        name="fl-adaptive-grid",
+        base={"arch": arch, "workload": "fl-sim", "rounds": rounds,
+              "batch": 16,
+              "options": {"n_clients": n_clients, "lr": 0.2,
+                          "error_tolerance": 4.5, "eval_every": 8,
+                          "scheme": "fwq", "resolve_drift_db": 6.0}},
+        axes=(Axis("options.faults", (None, severe)),
+              Axis("options.precision_program", (None, program))))
+
+
 def preset_grad_comm_wire(rounds: int = 2) -> Sweep:
     """Gradient wire-compression ablation: train smokes over comm bits.
 
@@ -286,7 +320,14 @@ def preset_ci_tiny() -> Sweep:
             {"arch": "resnet", "workload": "fl-sim", "rounds": 3, "batch": 8,
              "options": {"scheme": "fwq", "n_clients": 4, "lr": 0.1,
                          "faults": {"dropout_prob": 0.2, "packet_loss": 0.15,
-                                    "corrupt_prob": 0.25}}},))
+                                    "corrupt_prob": 0.25}}},
+            # adaptive-precision smoke: a deliberately tight energy budget so
+            # the energy_budget controller actually demotes bits in CI, and
+            # the analyzer's envelope proofs cover the demoted widths
+            {"arch": "resnet", "workload": "fl-sim", "rounds": 3, "batch": 8,
+             "options": {"scheme": "fwq", "n_clients": 4, "lr": 0.1,
+                         "precision_program": {"kind": "energy_budget",
+                                               "budget_j": 14.0}}},))
 
 
 PRESETS = {
@@ -294,6 +335,7 @@ PRESETS = {
     "serve-precision-ablation": preset_serve_precision_ablation,
     "fl-codesign-grid": preset_fl_codesign_grid,
     "fl-fault-grid": preset_fl_fault_grid,
+    "fl-adaptive-grid": preset_fl_adaptive_grid,
     "grad-comm-wire": preset_grad_comm_wire,
     "ci-tiny": preset_ci_tiny,
 }

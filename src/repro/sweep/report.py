@@ -144,6 +144,30 @@ def fl_fault_row(rec: dict) -> dict:
     }
 
 
+def fl_adaptive_row(rec: dict) -> dict:
+    s, m = rec["spec"], rec["metrics"]
+    prog = m.get("program") or {}
+    pp = s["options"].get("precision_program")
+    kind = (pp.get("kind") if isinstance(pp, dict) else pp) or "static"
+    budget = prog.get("budget_j") or (pp.get("budget_j")
+                                      if isinstance(pp, dict) else None)
+    within = ("yes" if prog.get("within_budget")
+              else "NO" if prog.get("within_budget") is False else "-")
+    return {
+        "program": kind,
+        "faults": "severe" if s["options"].get("faults") else "none",
+        "final loss": _f(m.get("final_loss"), "{:.4f}"),
+        "energy (J)": _f(m.get("total_energy_j"), "{:.2f}"),
+        "budget (J)": _f(budget, "{:.0f}") if budget else "-",
+        "within": within,
+        "demotions": str(prog.get("demotions", 0)),
+        "restores": str(prog.get("restores", 0)),
+        "bits": "/".join(str(b) for b in m.get("bits_mix", [])),
+        "comm bits": "/".join(str(b) for b in m.get("comm_bits_mix", [])),
+        "retx (J)": _f(m.get("retx_energy_j"), "{:.2f}"),
+    }
+
+
 _ROW_ADAPTERS = {
     "dryrun": roofline_row,
     "serve": serving_row,
@@ -156,6 +180,7 @@ _ROW_ADAPTERS = {
 #: adapter doesn't carry (the fault grid's resilience counters).
 _SWEEP_ROW_ADAPTERS = {
     "fl-fault-grid": {"fl-sim": fl_fault_row},
+    "fl-adaptive-grid": {"fl-sim": fl_adaptive_row},
 }
 
 

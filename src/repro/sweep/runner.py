@@ -85,6 +85,11 @@ def execute_cell(spec: RunSpec) -> dict:
             "rejected_updates": int(out.get("total_rejected", 0)),
             "undelivered": int(out.get("total_undelivered", 0)),
             "dropped_midround": int(out.get("total_dropped_midround", 0)),
+            # adaptive-precision controller summary (absent for the default
+            # constant program) + the wire widths the schedule visited
+            "program": out.get("program"),
+            "comm_bits_mix": sorted({int(e.get("comm_bits", 32))
+                                     for e in energy}),
         }
     if wl == "serve":
         return dataclasses.asdict(sess.serve())

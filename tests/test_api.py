@@ -167,20 +167,23 @@ class TestSessionWorkloads:
         assert d["kind"] == "train" and d["n_devices"] == 1
 
 
-class TestDeprecatedShims:
-    def test_paramctx_lazy_quant_warns_but_works(self):
+class TestRemovedShims:
+    """The PR-3 deprecation shims are gone: the policy forms are the only
+    spellings, and the old keywords fail loudly instead of warning."""
+
+    def test_paramctx_lazy_quant_removed(self):
         from repro.launch.mesh import axis_ctx_for, make_test_mesh
         from repro.models.common import ParamCtx
 
         axes = axis_ctx_for(make_test_mesh((1, 1), ("data", "model")))
-        with pytest.warns(DeprecationWarning):
-            pc = ParamCtx(ctx=axes, compute_dtype=jnp.float32, lazy_quant=True)
+        with pytest.raises(TypeError):
+            ParamCtx(ctx=axes, compute_dtype=jnp.float32, lazy_quant=True)
+        pc = ParamCtx.from_policy(axes, PrecisionPolicy.lazy_int8(),
+                                  compute_dtype=jnp.float32)
         assert pc.lazy
-        pc2 = ParamCtx.from_policy(axes, PrecisionPolicy.lazy_int8(),
-                                   compute_dtype=jnp.float32)
-        assert pc2.lazy
+        assert not ParamCtx(ctx=axes).lazy
 
-    def test_build_decode_step_lazy_quant_warns_but_works(self):
+    def test_build_decode_step_lazy_quant_removed(self):
         from repro.configs import get_config, smoke_variant
         from repro.launch.mesh import axis_ctx_for, make_test_mesh
         from repro.launch.steps import build_decode_step
@@ -188,15 +191,19 @@ class TestDeprecatedShims:
 
         mesh = make_test_mesh((1, 1), ("data", "model"))
         model = build_model(smoke_variant(get_config("yi-6b")))
-        with pytest.warns(DeprecationWarning):
-            ss = build_decode_step(model, mesh, axis_ctx_for(mesh),
-                                   s_max=16, batch_global=2, lazy_quant=False)
+        with pytest.raises(TypeError):
+            build_decode_step(model, mesh, axis_ctx_for(mesh),
+                              s_max=16, batch_global=2, lazy_quant=False)
+        ss = build_decode_step(model, mesh, axis_ctx_for(mesh),
+                               s_max=16, batch_global=2)
         assert ss.fn is not None
 
-    def test_orchestrator_bits_options_warns_but_works(self):
+    def test_orchestrator_bits_options_removed(self):
         from repro.fed.orchestrator import OrchestratorConfig
 
-        with pytest.warns(DeprecationWarning):
-            cfg = OrchestratorConfig(n_devices=4, n_rounds=2,
-                                     bits_options=(8, 32))
+        with pytest.raises(TypeError):
+            OrchestratorConfig(n_devices=4, n_rounds=2, bits_options=(8, 32))
+        cfg = OrchestratorConfig(
+            n_devices=4, n_rounds=2,
+            precision=PrecisionPolicy(bit_options=(8, 32)))
         assert cfg.precision.bit_options == (8, 32)
